@@ -1,0 +1,66 @@
+"""The paper's headline scenario: fine-tune with optimizer states resident on
+NVMe (infinity offload engine), so device memory only holds bf16 params +
+activations. The chunked Adam step streams NVMe -> host -> NVMe with
+read/update/write overlap (paper Sec. 5.2.2).
+
+    PYTHONPATH=src python examples/finetune_with_offload.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.config import OffloadConfig, RunConfig, TrainConfig
+from repro.core.engine import ZeroInfinityEngine
+from repro.core.offload import ChunkedAdamOffload, NvmeStore
+from repro.launch.mesh import make_local_mesh
+
+
+def flatten(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(p): l for p, l in flat}
+
+
+def unflatten(like, flat):
+    leaves, _ = jax.tree_util.tree_flatten_with_path(like)
+    vals = [jnp.asarray(flat[jax.tree_util.keystr(p)]).astype(l.dtype)
+            for p, l in leaves]
+    return jax.tree.unflatten(jax.tree.structure(like), vals)
+
+
+def main():
+    cfg = configs.smoke("gemma-7b")
+    run = RunConfig(model=cfg, offload=OffloadConfig(opt_tier="nvme"),
+                    train=TrainConfig(lr=2e-3, warmup_steps=3))
+    mesh = make_local_mesh(1, 1)
+    eng = ZeroInfinityEngine(run, mesh)
+    state = eng.init_state(jax.random.PRNGKey(0))
+
+    # optimizer states live on "NVMe" (file-backed store w/ pinned buffer pool)
+    store = NvmeStore("/tmp/repro_example_nvme", pool_mb=32, overlap=True)
+    offload = ChunkedAdamOffload(store, chunk_elems=1 << 16)
+    offload.init_from_params({k: np.asarray(v) for k, v in flatten(state["params"]).items()})
+
+    grads_step = jax.jit(eng.make_train_step(grads_only=True))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 64), 0, cfg.vocab_size)}
+    with jax.set_mesh(mesh):
+        for i in range(10):
+            grads, metrics = grads_step(state, batch)
+            new_flat = offload.step(
+                {k: np.asarray(v, np.float32) for k, v in flatten(grads).items()},
+                lr=2e-3 * min((i + 1) / 3, 1.0))
+            state = {"params": unflatten(state["params"], new_flat), "opt": state["opt"]}
+            print(f"step {i} loss {float(metrics['loss']):.4f}")
+    stats = store.bandwidth_stats()
+    print(f"NVMe tier: read {stats['read_gbps']:.2f} GB/s, "
+          f"write {stats['write_gbps']:.2f} GB/s, "
+          f"pinned-pool peak {stats['pinned_peak_bytes']>>20} MiB "
+          f"(vs {3 * eng.bundle.n_params() * 4 >> 20} MiB of optimizer state)")
+
+
+if __name__ == "__main__":
+    main()

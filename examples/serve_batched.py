@@ -1,0 +1,23 @@
+"""Batched serving with a KV cache: prefill a prompt batch, decode greedily.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch recurrentgemma-9b
+(any of the 10 assigned arch ids; reduced smoke config on CPU)
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m")
+    args = ap.parse_args()
+    sys.argv = ["serve", "--arch", args.arch, "--smoke", "--batch", "2",
+                "--prompt-len", "24", "--new-tokens", "12"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Configuration system: model / parallelism / offload / train configs.
+
+Everything is a frozen dataclass so configs are hashable (usable as jit static
+args and cache keys). ``repro.configs`` registers one ``ModelConfig`` per
+assigned architecture; ``SHAPES`` defines the assigned input-shape set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    mlp_kind: str = "swiglu"  # swiglu | geglu | relu2 | gelu
+    norm_kind: str = "rmsnorm"  # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    logit_softcap: float = 0.0
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 64
+    conv_width: int = 4
+    # --- hybrid (recurrentgemma) ---
+    window: int = 0  # local attention window; 0 = global
+    lru_width: int = 0
+    block_pattern: Tuple[str, ...] = ()  # e.g. ("rec", "rec", "attn")
+    # --- enc-dec ---
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    # --- vlm ---
+    vision_len: int = 0  # number of precomputed patch-embedding positions
+    # numerics
+    dtype: str = "bfloat16"
+    score_dtype: str = "float32"  # attention score/softmax tensor dtype
+    moe_combine_dtype: str = "float32"  # MoE combine scatter-add dtype
+    attn_chunk: int = 256  # chunked-attention q/kv block size (perf knob)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context? (SSM / windowed hybrids)."""
+        return self.family in ("ssm", "hybrid")
+
+    def padded_vocab(self, multiple: int = 2048) -> int:
+        """Pad vocab so TP shards are even and MXU-aligned (Megatron-style)."""
+        v = self.vocab_size
+        return ((v + multiple - 1) // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """How the model is laid out on the mesh. Paper technologies are knobs."""
+
+    zero_stage: int = 3  # 0=DP, 1=opt, 2=opt+grads, 3=opt+grads+params
+    zero_scope: str = "global"  # "global" (paper) | "pod" (hierarchical, beyond-paper)
+    partition_mode: str = "allgather"  # "allgather" (bandwidth-centric) | "broadcast" (baseline)
+    attn_strategy: str = "auto"  # auto | tp | cp (context parallel)
+    pure_dp: bool = False  # paper-faithful: NO tensor slicing — batch over ALL
+    # mesh axes, ZeRO-3 partitions params across all of them (paper Sec. 8.4)
+    moe_zero_stage: int = 3  # ZeRO stage for EXPERT weights only: top-k MoE
+    # cuts per-gathered-byte AIT by k/E, so stage-3 expert gathers can become
+    # the collective bottleneck; stage<=2 keeps experts EP-sharded + dp-
+    # replicated (opt states still partitioned) — see EXPERIMENTS.md §Perf
+    tiling_factor: int = 1  # memory-centric tiling for big linears
+    prefetch: int = 1  # overlap-centric: layers of parameter prefetch (0=off)
+    remat: str = "full"  # full | dots | none — activation checkpoint policy
+    grad_accum: int = 1
+    grad_compression: str = "none"  # none | int8 (cross-pod, error feedback)
+    engine: str = "pjit"  # pjit (GSPMD-native) | zero3 (explicit shard_map)
+
+    def __post_init__(self):
+        assert self.zero_stage in (0, 1, 2, 3)
+        assert self.zero_scope in ("global", "pod")
+        assert self.partition_mode in ("allgather", "broadcast")
+        assert self.attn_strategy in ("auto", "tp", "cp")
+        assert self.remat in ("full", "dots", "none")
+        assert self.grad_compression in ("none", "int8")
+        assert self.engine in ("pjit", "zero3")
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadConfig:
+    """Infinity offload engine placement (paper Table 2 tiers)."""
+
+    param_tier: str = "device"  # device | host | nvme
+    opt_tier: str = "device"  # device | host | nvme
+    act_tier: str = "device"  # device | host    (activation checkpoints)
+    nvme_dir: str = "/tmp/repro_nvme"
+    pinned_buffer_mb: int = 64  # buffer-pool budget of the NvmeStore
+    overlap: bool = True  # async prefetch/writeback threads
+
+    def __post_init__(self):
+        for t in (self.param_tier, self.opt_tier):
+            assert t in ("device", "host", "nvme"), t
+        assert self.act_tier in ("device", "host")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 10
+    steps: int = 100
+    seed: int = 0
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    def __post_init__(self):
+        assert self.kind in ("train", "prefill", "decode")
+
+
+# The assigned input-shape set (identical for all 10 LM-family archs).
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Top-level bundle handed to the engine / launcher."""
+
+    model: ModelConfig
+    parallel: ParallelConfig = ParallelConfig()
+    offload: OffloadConfig = OffloadConfig()
+    train: TrainConfig = TrainConfig()
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)

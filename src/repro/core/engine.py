@@ -1,0 +1,239 @@
+"""ZeroInfinityEngine: RunConfig + mesh -> sharded train_step / serve fns.
+
+This is the GSPMD-native engine: ZeRO stage-3 parameter/grad/optimizer
+partitioning is expressed through shardings (see core/partition.py), so XLA
+emits the paper's collective schedule (per-layer all-gather fwd/bwd,
+reduce-scatter for grads) inside the scanned layer loop. The paper-faithful
+explicit-collective engine (controllable prefetch depth,
+broadcast-vs-allgather modes) lives in core/zero.py.
+
+Offload tiers:
+  * "device"  — everything in HBM.
+  * "host"    — optimizer states (and/or bf16 params) live in pinned host
+                memory (`memory_kind="pinned_host"`); the train step streams
+                them HBM<->host with in-graph device_put (async copies).
+  * "nvme"    — optimizer states live in the NvmeStore; the jit step computes
+                grads only and the host loop runs the chunked, overlapped
+                optimizer step (see core/offload.py + launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import RunConfig, ShapeConfig
+from repro.core import partition as pt
+from repro.models import registry
+from repro.optim import adam
+
+
+def _tree_shardings(defs, rules, mesh, memory_kind=None):
+    return pt.sharding_tree(defs, rules, mesh, memory_kind)
+
+
+def _device_put_tree(tree, shardings):
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+class ZeroInfinityEngine:
+    def __init__(self, run: RunConfig, mesh: Mesh, *, host_offload_in_graph: Optional[bool] = None):
+        self.run = run
+        self.mesh = mesh
+        mc, pc = run.model, run.parallel
+        self.act_rules = pt.make_rules(mc, mesh, pc, for_state="act")
+        self.param_rules = pt.make_rules(mc, mesh, pc, for_state="param")
+        self.grad_rules = pt.make_rules(mc, mesh, pc, for_state="grad")
+        self.opt_rules = pt.make_rules(mc, mesh, pc, for_state="opt")
+        self.bundle = registry.build(mc, self.act_rules, pc)
+        self.opt_defs = adam.state_defs(self.bundle.defs)
+        if host_offload_in_graph is None:
+            host_offload_in_graph = host_memory_kind_supported()
+        self.host_ok = host_offload_in_graph
+
+    # ------------------------------------------------------------------
+    # shardings & specs
+    # ------------------------------------------------------------------
+
+    def _tier_kind(self, tier: str) -> Optional[str]:
+        if tier == "host" and self.host_ok:
+            return "pinned_host"
+        return None  # device, nvme (nvme states never enter the graph)
+
+    def param_shardings(self):
+        return _tree_shardings(self.bundle.defs, self.param_rules, self.mesh,
+                               self._tier_kind(self.run.offload.param_tier))
+
+    def opt_shardings(self):
+        return _tree_shardings(self.opt_defs, self.opt_rules, self.mesh,
+                               self._tier_kind(self.run.offload.opt_tier))
+
+    def grad_shardings(self):
+        return _tree_shardings(self.bundle.defs, self.grad_rules, self.mesh)
+
+    def param_specs(self):
+        return pt.shape_struct_tree(self.bundle.defs, self.param_rules, self.mesh,
+                                    self._tier_kind(self.run.offload.param_tier))
+
+    def opt_specs(self):
+        return pt.shape_struct_tree(self.opt_defs, self.opt_rules, self.mesh,
+                                    self._tier_kind(self.run.offload.opt_tier))
+
+    def state_specs(self):
+        return {"params": self.param_specs(), "opt": self._opt_state_from(self.opt_specs())}
+
+    @staticmethod
+    def _opt_state_from(tree) -> adam.AdamState:
+        return adam.AdamState(tree["step"], tree["master"], tree["m"], tree["v"])
+
+    def batch_sharding(self, spec: jax.ShapeDtypeStruct):
+        dp = (tuple(self.mesh.axis_names) if self.run.parallel.pure_dp
+              else pt.dp_axes(self.mesh))
+        # divisibility guard: a global batch smaller than dp (e.g. the
+        # long_500k single-sequence decode) replicates over the surplus axes
+        if dp and spec.shape:
+            deg = 1
+            usable = []
+            for a in dp:
+                if spec.shape[0] % (deg * self.mesh.shape[a]) == 0:
+                    usable.append(a)
+                    deg *= self.mesh.shape[a]
+            dp = tuple(usable)
+        axes = [dp if dp else None] + [None] * (len(spec.shape) - 1)
+        while axes and axes[-1] is None:
+            axes.pop()
+        return NamedSharding(self.mesh, P(*axes))
+
+    def batch_specs(self, shape: ShapeConfig):
+        specs = self.bundle.input_specs(shape)
+        return {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=self.batch_sharding(v))
+                for k, v in specs.items()}
+
+    def cache_specs(self, shape: ShapeConfig):
+        defs = self.bundle.cache_defs(shape.global_batch, shape.seq_len)
+        return pt.shape_struct_tree(defs, self.act_rules, self.mesh)
+
+    # ------------------------------------------------------------------
+    # init (real allocation — small configs / CPU)
+    # ------------------------------------------------------------------
+
+    def init_state(self, rng: jax.Array):
+        shardings = self.param_shardings()
+
+        def _init(rng):
+            params = pt.init_tree(rng, self.bundle.defs)
+            return params
+
+        with jax.set_mesh(self.mesh):
+            params = jax.jit(_init, out_shardings=shardings)(rng)
+            opt = jax.jit(adam.init_state,
+                          out_shardings=self._opt_state_from(self.opt_shardings()))(params)
+        return {"params": params, "opt": opt}
+
+    # ------------------------------------------------------------------
+    # train step
+    # ------------------------------------------------------------------
+
+    def make_train_step(self, *, grads_only: bool = False):
+        run = self.run
+        tc = run.train
+        pc = run.parallel
+        bundle = self.bundle
+        grad_shardings = self.grad_shardings()
+        opt_host = run.offload.opt_tier == "host" and self.host_ok
+
+        def grads_of(params, batch):
+            accum = pc.grad_accum
+            if accum <= 1:
+                loss, grads = jax.value_and_grad(bundle.loss)(params, batch)
+                return loss, grads
+            # microbatch over the leading batch dim
+            micro = jax.tree.map(lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                                 batch)
+
+            def step(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = jax.value_and_grad(bundle.loss)(params, mb)
+                g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_acc + loss, g), ()
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(step, (jnp.zeros(()), zeros), micro)
+            inv = 1.0 / accum
+            return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+        def train_step(state, batch):
+            params, opt = state["params"], state["opt"]
+            if opt_host:  # stream optimizer states host -> HBM for the update
+                opt = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s.with_memory_kind("device")),
+                    opt, self._opt_state_from(self.opt_shardings()))
+            loss, grads = grads_of(params, batch)
+            # ZeRO grad partitioning: force reduce-scatter placement
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, grad_shardings)
+            if grads_only:
+                gnorm = _global_norm(grads)
+                return grads, {"loss": loss, "grad_norm": gnorm}
+            new_params, new_opt = adam.apply_updates(grads, opt, tc, params_prev=params)
+            if opt_host:  # stream updated states back to pinned host memory
+                new_opt = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s), new_opt,
+                    self._opt_state_from(self.opt_shardings()))
+            metrics = {"loss": loss, "grad_norm": _global_norm(grads),
+                       "lr": adam.lr_at(tc, new_opt.step)}
+            return {"params": new_params, "opt": new_opt}, metrics
+
+        return train_step
+
+    def lower_train(self, shape: ShapeConfig, *, grads_only: bool = False, donate: bool = True):
+        step = self.make_train_step(grads_only=grads_only)
+        state_specs = self.state_specs()
+        batch = self.batch_specs(shape)
+        kw = {"donate_argnums": (0,)} if donate and not grads_only else {}
+        with jax.set_mesh(self.mesh):
+            return jax.jit(step, **kw).lower(state_specs, batch)
+
+    # ------------------------------------------------------------------
+    # serve steps
+    # ------------------------------------------------------------------
+
+    def lower_prefill(self, shape: ShapeConfig):
+        with jax.set_mesh(self.mesh):
+            return jax.jit(self.bundle.prefill).lower(self.param_specs(), self.batch_specs(shape))
+
+    def lower_decode(self, shape: ShapeConfig):
+        batch = self.batch_specs(shape)
+        cache = self.cache_specs(shape)
+        with jax.set_mesh(self.mesh):
+            return jax.jit(self.bundle.decode_step).lower(self.param_specs(), cache, batch)
+
+    def lower(self, shape: ShapeConfig):
+        if shape.kind == "train":
+            return self.lower_train(shape)
+        if shape.kind == "prefill":
+            return self.lower_prefill(shape)
+        return self.lower_decode(shape)
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+@functools.lru_cache(maxsize=1)
+def host_memory_kind_supported() -> bool:
+    """Probe whether the backend supports pinned_host shardings in jit."""
+    try:
+        dev = jax.devices()[0]
+        mesh = Mesh([dev], ("probe",))
+        s = NamedSharding(mesh, P(), memory_kind="pinned_host")
+        x = jax.ShapeDtypeStruct((8,), jnp.float32, sharding=s)
+        jax.jit(lambda a: a * 2.0, in_shardings=s, out_shardings=s).lower(x).compile()
+        return True
+    except Exception:
+        return False

@@ -1,0 +1,255 @@
+"""Infinity offload engine (paper Secs. 5.1.1, 5.2.2, 6.3).
+
+Three tiers: device HBM, pinned host DRAM, NVMe. The in-graph host tier is
+handled by the engine via ``memory_kind`` shardings; this module implements
+the *out-of-graph* NVMe tier — the DeepNVMe analogue:
+
+  * ``PinnedBufferPool`` — a fixed, reused budget of host buffers (paper:
+    "manages the limited supply of pinned memory by reusing a small amount
+    ... preventing memory fragmentation").
+  * ``NvmeStore`` — file-backed array store with asynchronous bulk
+    read/write on worker threads and explicit flush (DeepNVMe's async
+    request + synchronization API), with measured bandwidth counters.
+  * ``ChunkedAdamOffload`` — the NVMe-tier optimizer step: optimizer states
+    stream NVMe -> host in chunks; chunk k+1's read overlaps chunk k's
+    CPU update overlaps chunk k-1's write-back (paper Sec. 5.2.2's
+    read/update/write pipeline). The CPU update is vectorized numpy — the
+    TPU-host analogue of DeepSpeed's CPU-Adam.
+
+On real TPU VMs the file I/O slot is implemented by tensorstore/OCDBT; the
+``ArrayStore`` interface isolates that swap.
+"""
+from __future__ import annotations
+
+import math
+import os
+import queue
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+DEFAULT_CHUNK_ELEMS = 1 << 22  # 4M elements per pipeline chunk
+
+
+class PinnedBufferPool:
+    """Reusable host buffers under a fixed byte budget.
+
+    Buffers are recycled by (rounded) size class; acquiring beyond the budget
+    blocks until a buffer is released — backpressure instead of fragmentation.
+    """
+
+    def __init__(self, budget_bytes: int):
+        self.budget = budget_bytes
+        self._lock = threading.Condition()
+        self._free: Dict[int, List[np.ndarray]] = {}
+        self._outstanding = 0
+        self.peak_outstanding = 0
+
+    @staticmethod
+    def _size_class(nbytes: int) -> int:
+        return 1 << max(12, math.ceil(math.log2(max(nbytes, 1))))
+
+    def acquire(self, nbytes: int) -> np.ndarray:
+        cls = self._size_class(nbytes)
+        with self._lock:
+            while self._outstanding + cls > self.budget and self._outstanding > 0:
+                self._lock.wait(timeout=10.0)
+            bucket = self._free.get(cls)
+            if bucket:
+                buf = bucket.pop()
+            else:
+                buf = np.empty(cls, dtype=np.uint8)
+            self._outstanding += cls
+            self.peak_outstanding = max(self.peak_outstanding, self._outstanding)
+        return buf
+
+    def release(self, buf: np.ndarray) -> None:
+        cls = buf.nbytes
+        with self._lock:
+            self._free.setdefault(cls, []).append(buf)
+            self._outstanding -= cls
+            self._lock.notify_all()
+
+
+class NvmeStore:
+    """Async file-backed array store (DeepNVMe analogue).
+
+    write(key, arr) / read(key) return futures; flush() synchronizes.
+    Bandwidth counters support the paper's Fig. 5b/6c-style measurements.
+    """
+
+    def __init__(self, directory: str, pool_mb: int = 64, workers: int = 2,
+                 overlap: bool = True):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self.pool = PinnedBufferPool(pool_mb << 20)
+        self.overlap = overlap
+        self._pool_exec = ThreadPoolExecutor(max_workers=workers) if overlap else None
+        self._meta: Dict[str, Tuple[tuple, str]] = {}
+        self.bytes_read = 0
+        self.bytes_written = 0
+        self.read_time = 0.0
+        self.write_time = 0.0
+        self._pending: List[Future] = []
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.dir, key.replace("/", "_") + ".bin")
+
+    # -- core sync ops (run on worker threads when overlap=True) ----------
+
+    def _write_sync(self, key: str, arr: np.ndarray) -> None:
+        t0 = time.perf_counter()
+        buf = self.pool.acquire(arr.nbytes)
+        staged = buf[: arr.nbytes].view(arr.dtype.str).reshape(arr.shape)
+        np.copyto(staged, arr)  # host staging copy through the pinned pool
+        tmp = self._path(key) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(staged.tobytes())
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._path(key))
+        self.pool.release(buf)
+        self._meta[key] = (arr.shape, arr.dtype.str)
+        self.bytes_written += arr.nbytes
+        self.write_time += time.perf_counter() - t0
+
+    def _read_sync(self, key: str) -> np.ndarray:
+        t0 = time.perf_counter()
+        shape, dtype = self._meta[key]
+        nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize if shape else np.dtype(dtype).itemsize
+        buf = self.pool.acquire(max(nbytes, 1))
+        with open(self._path(key), "rb") as f:
+            data = f.read()
+        out = np.frombuffer(data, dtype=dtype).reshape(shape).copy()
+        self.pool.release(buf)
+        self.bytes_read += nbytes
+        self.read_time += time.perf_counter() - t0
+        return out
+
+    # -- async API ----------------------------------------------------------
+
+    def write(self, key: str, arr: np.ndarray) -> Future:
+        if not self.overlap:
+            f: Future = Future()
+            f.set_result(self._write_sync(key, np.asarray(arr)))
+            return f
+        fut = self._pool_exec.submit(self._write_sync, key, np.asarray(arr))
+        self._pending.append(fut)
+        return fut
+
+    def read(self, key: str) -> Future:
+        if not self.overlap:
+            f: Future = Future()
+            f.set_result(self._read_sync(key))
+            return f
+        return self._pool_exec.submit(self._read_sync, key)
+
+    def flush(self) -> None:
+        for f in self._pending:
+            f.result()
+        self._pending.clear()
+
+    def keys(self):
+        return list(self._meta)
+
+    def bandwidth_stats(self) -> dict:
+        return {
+            "read_gbps": self.bytes_read / max(self.read_time, 1e-9) / 1e9,
+            "write_gbps": self.bytes_written / max(self.write_time, 1e-9) / 1e9,
+            "bytes_read": self.bytes_read,
+            "bytes_written": self.bytes_written,
+            "pinned_peak_bytes": self.pool.peak_outstanding,
+        }
+
+
+def _adam_update_numpy(p, m, v, g, lr, b1, b2, eps, wd, c1, c2):
+    """Vectorized CPU Adam (the DeepSpeed CPU-Adam analogue)."""
+    np.multiply(m, b1, out=m)
+    m += (1.0 - b1) * g
+    np.multiply(v, b2, out=v)
+    v += (1.0 - b2) * g * g
+    mh = m / c1
+    vh = v / c2
+    p -= lr * (mh / (np.sqrt(vh) + eps) + wd * p)
+    return p, m, v
+
+
+class ChunkedAdamOffload:
+    """NVMe-resident optimizer states with a 3-stage streamed update.
+
+    States are stored as fixed-size chunks. step() runs the software
+    pipeline: read(k+1) || update(k) || write(k-1). With overlap disabled the
+    stages serialize — that contrast is the paper's Fig. 6d-style benchmark.
+    """
+
+    def __init__(self, store: NvmeStore, chunk_elems: int = DEFAULT_CHUNK_ELEMS):
+        self.store = store
+        self.chunk = chunk_elems
+        self.layout: List[Tuple[str, tuple, int]] = []  # (leaf key, shape, n elems)
+        self.step_count = 0
+
+    # -- initialization -----------------------------------------------------
+
+    def init_from_params(self, flat_params: Dict[str, np.ndarray]) -> None:
+        for key, p in flat_params.items():
+            p32 = np.asarray(p, dtype=np.float32).reshape(-1)
+            self.layout.append((key, np.asarray(p).shape, p32.size))
+            for ci, off in enumerate(range(0, p32.size, self.chunk)):
+                sl = p32[off: off + self.chunk]
+                self.store.write(f"{key}.master.{ci}", sl)
+                self.store.write(f"{key}.m.{ci}", np.zeros_like(sl))
+                self.store.write(f"{key}.v.{ci}", np.zeros_like(sl))
+        self.store.flush()
+
+    def _chunks_of(self, key: str, n: int) -> Iterator[Tuple[int, int, int]]:
+        for ci, off in enumerate(range(0, n, self.chunk)):
+            yield ci, off, min(self.chunk, n - off)
+
+    # -- the streamed optimizer step ---------------------------------------
+
+    def step(self, flat_grads: Dict[str, np.ndarray], *, lr: float, beta1: float = 0.9,
+             beta2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1
+             ) -> Dict[str, np.ndarray]:
+        """Consume fp32 grads per leaf; return updated bf16-able fp32 params."""
+        self.step_count += 1
+        c1 = 1.0 - beta1 ** self.step_count
+        c2 = 1.0 - beta2 ** self.step_count
+
+        # Build the global chunk worklist across leaves
+        work = []
+        for key, shape, n in self.layout:
+            g = np.asarray(flat_grads[key], dtype=np.float32).reshape(-1)
+            for ci, off, ln in self._chunks_of(key, n):
+                work.append((key, ci, g[off: off + ln]))
+
+        out: Dict[str, np.ndarray] = {
+            key: np.empty(n, np.float32) for key, _, n in self.layout
+        }
+        offs = {key: 0 for key, _, _ in self.layout}
+
+        def read_chunk(item):
+            key, ci, g = item
+            return (self.store.read(f"{key}.master.{ci}"),
+                    self.store.read(f"{key}.m.{ci}"),
+                    self.store.read(f"{key}.v.{ci}"))
+
+        # Software pipeline: prefetch next reads while updating current
+        pending = read_chunk(work[0]) if work else None
+        for i, item in enumerate(work):
+            key, ci, g = item
+            nxt = read_chunk(work[i + 1]) if i + 1 < len(work) else None
+            p, m, v = (f.result() for f in pending)
+            p, m, v = _adam_update_numpy(p, m, v, g, lr, beta1, beta2, eps,
+                                         weight_decay, c1, c2)
+            o = offs[key]
+            out[key][o: o + p.size] = p
+            offs[key] = o + p.size
+            self.store.write(f"{key}.master.{ci}", p)  # async write-back
+            self.store.write(f"{key}.m.{ci}", m)
+            self.store.write(f"{key}.v.{ci}", v)
+            pending = nxt
+        self.store.flush()
+        return {key: out[key].reshape(shape) for key, shape, _ in self.layout}

@@ -1,0 +1,59 @@
+"""Memory-centric tiling (paper Sec. 5.1.3).
+
+A large linear ``y = x @ W`` is restated as a mathematically equivalent
+sequence of smaller linears over tiles of ``W``, executed sequentially by a
+``lax.scan``. Combined with ZeRO-3 sharding, XLA gathers one tile per scan
+step, so the *gathered* (unsharded) working memory drops proportionally to
+the number of tiles — the paper's MSWM fix without tensor-slicing
+parallelism. The TPU kernel-level counterpart (explicit VMEM bound via
+BlockSpec) is ``kernels/tiled_matmul.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tiled_matmul_xla(x: jax.Array, w: jax.Array, tiles: int, axis: str | None = None) -> jax.Array:
+    """x: (..., K) @ w: (K, N) with W processed in ``tiles`` sequential tiles.
+
+    axis="n": tile output columns (each step is a thin linear producing a
+              slice of y) — the paper's formulation.
+    axis="k": tile the contraction (each step consumes a slice of x and
+              accumulates into y) — used when K >> N (e.g. the down-proj).
+    """
+    if tiles <= 1:
+        return x @ w
+    K, N = w.shape
+    if axis is None:
+        axis = "n" if N >= K else "k"
+
+    if axis == "n":
+        assert N % tiles == 0, (N, tiles)
+        wt = jnp.moveaxis(w.reshape(K, tiles, N // tiles), 1, 0)  # (t, K, N/t)
+
+        def body(_, wi):
+            return None, x @ wi
+
+        _, ys = jax.lax.scan(body, None, wt)  # (t, ..., N/t)
+        ys = jnp.moveaxis(ys, 0, -2)
+        return ys.reshape(*x.shape[:-1], N)
+
+    assert K % tiles == 0, (K, tiles)
+    wt = w.reshape(tiles, K // tiles, N)
+    xt = jnp.moveaxis(x.reshape(*x.shape[:-1], tiles, K // tiles), -2, 0)  # (t, ..., K/t)
+
+    def body(acc, xw):
+        xi, wi = xw
+        return acc + jnp.einsum("...k,kn->...n", xi, wi,
+                                preferred_element_type=jnp.float32), None
+
+    acc0 = jnp.zeros((*x.shape[:-1], N), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (xt, wt))
+    return acc.astype(x.dtype)
+
+
+def gathered_working_bytes(K: int, N: int, tiles: int, bytes_per_el: int = 2) -> int:
+    """Model of the per-step gathered parameter working set (paper Eq. 4 /
+    Fig. 6b): full W must be materialized without tiling; W/tiles with it."""
+    return K * N * bytes_per_el // max(tiles, 1)

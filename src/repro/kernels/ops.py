@@ -1,0 +1,57 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on a TPU
+runtime set ``REPRO_PALLAS_COMPILE=1`` (or pass interpret=False) to run the
+compiled kernels.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_adam as _ad
+from repro.kernels import tiled_matmul as _mm
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+LANE = _ad.LANE
+
+
+def fused_adam(p32, g32, m, v, *, lr, beta1, beta2, eps, weight_decay, bc1, bc2,
+               block_rows: int = _ad.DEFAULT_BLOCK_ROWS):
+    """Flat fused Adam over an arbitrary-shaped leaf. Returns (p32, m, v)
+    shaped like the input (the bf16 copy is returned via .astype by callers
+    that want it; see optim/adam.py)."""
+    shape = p32.shape
+    n = p32.size
+    pad = (-n) % LANE
+
+    def flat(x):
+        x = x.reshape(-1).astype(jnp.float32)
+        if pad:
+            x = jnp.pad(x, (0, pad))
+        return x.reshape(-1, LANE)
+
+    scalars = jnp.stack([lr, jnp.float32(beta1), jnp.float32(beta2),
+                         jnp.float32(eps), jnp.float32(weight_decay),
+                         bc1, bc2]).astype(jnp.float32)
+    p2, m2, v2, _ = _ad.fused_adam_flat(flat(p32), flat(g32), flat(m), flat(v),
+                                        scalars, block_rows=block_rows,
+                                        interpret=_INTERPRET)
+
+    def unflat(x):
+        return x.reshape(-1)[:n].reshape(shape)
+
+    return unflat(p2), unflat(m2), unflat(v2)
+
+
+def tiled_matmul(x, w, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _mm.tiled_matmul(x, w, **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _fa.flash_attention(q, k, v, causal=causal, **kw)

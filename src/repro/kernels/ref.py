@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_ref(p32, g32, m, v, *, lr, beta1, beta2, eps, weight_decay, bc1, bc2):
+    g = g32.astype(jnp.float32)
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    mh = m / bc1
+    vh = v / bc2
+    p32 = p32 - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p32)
+    return p32, m, v
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,H,Sq,D), k/v: (B,KV,Sk,D) -> (B,H,Sq,D). fp32 softmax."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    n_rep = H // KV
+    k = jnp.repeat(k, n_rep, axis=1)
+    v = jnp.repeat(v, n_rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * (D ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

@@ -1,0 +1,64 @@
+"""Memory-centric tiled matmul — Pallas TPU kernel (paper Sec. 5.1.3 at the
+kernel level).
+
+The XLA-level tiling (core/tiling.py) bounds the *gathered HBM* working set;
+this kernel bounds the *VMEM* working set explicitly: W streams through VMEM
+in (bk, bn) tiles, so an arbitrarily large operator (e.g. nemotron's
+18432x73728 up-projection, 162 MiB/bf16 per TP shard — bigger than VMEM)
+runs with a fixed small footprint. Accumulation in an f32 VMEM scratch over
+the sequential k grid axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def tiled_matmul(x, w, *, bm: int = 256, bn: int = 256, bk: int = 512,
+                 interpret: bool = True):
+    """x: (M, K) @ w: (K, N) -> (M, N). VMEM per step ~ bm*bk + bk*bn + bm*bn."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    # pad to whole blocks (zeros contribute nothing to the contraction)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    Mp, Kp, Np = M + pm, K + pk, N + pn
+    grid = (Mp // bm, Np // bn, Kp // bk)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out[:M, :N]

@@ -1,0 +1,198 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware: the sharding composition
+(ZeRO-3 x TP/CP/EP) is coherent on the production mesh, the program
+partitions (collectives resolve), and it yields the compiled artifact from
+which EXPERIMENTS.md's roofline terms are derived.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh pod1 --arch smollm-135m
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell, cached
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.config import RunConfig, ParallelConfig, OffloadConfig, SHAPES
+from repro.core import model_math
+from repro.core.engine import ZeroInfinityEngine
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.roofline import analysis
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def cell_skip_reason(arch: str, shape_name: str) -> str | None:
+    cfg = configs.get(arch)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: 512k dense-KV decode is quadratic by "
+                "definition — skipped per assignment (see DESIGN.md)")
+    return None
+
+
+def model_flops_for(bundle, shape) -> float:
+    n = bundle.n_params_active()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return model_math.model_flops(n, tokens)
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return model_math.decode_model_flops(n, shape.global_batch)  # 1 new token/seq
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             parallel: ParallelConfig, offload: OffloadConfig,
+             out_dir: str, force: bool = False, tag: str = "",
+             model_overrides: dict | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{mesh_name}__{arch}__{shape_name}{tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    skip = cell_skip_reason(arch, shape_name)
+    if skip:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": skip}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    n_chips = 1
+    for a in mesh.axis_names:
+        n_chips *= mesh.shape[a]
+    cfg = configs.get(arch)
+    if model_overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **model_overrides)
+    shape = SHAPES[shape_name]
+    run = RunConfig(model=cfg, parallel=parallel, offload=offload)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "n_chips": n_chips, "parallel": parallel.__dict__ | {},
+           "status": "error"}
+    t0 = time.time()
+    try:
+        if parallel.engine == "zero3":
+            from repro.core.zero import ExplicitZero3Engine
+
+            zeng = ExplicitZero3Engine(run, mesh)
+            if shape.kind != "train":
+                raise ValueError("explicit zero3 engine: train shapes only")
+            lowered = zeng.lower_train(shape)
+
+            class _B:  # bundle stand-in for flops accounting
+                pass
+
+            eng = _B()
+            eng.bundle = __import__("repro.models.registry", fromlist=["registry"]).build(cfg)
+        else:
+            eng = ZeroInfinityEngine(run, mesh)
+            lowered = eng.lower(shape)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mf = model_flops_for(eng.bundle, shape)
+        roof = analysis.analyze(compiled, arch=arch, shape=shape_name,
+                                mesh_name=mesh_name, n_chips=n_chips,
+                                model_flops_total=mf)
+        print(compiled.memory_analysis())   # proves it fits
+        print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+        rec.update(status="ok", lower_s=t_lower, compile_s=t_compile,
+                   n_params=eng.bundle.n_params(),
+                   n_params_active=eng.bundle.n_params_active(),
+                   memory_analysis=str(compiled.memory_analysis()),
+                   cost_analysis={k: float(v) for k, v in
+                                  (compiled.cost_analysis() or {}).items()
+                                  if isinstance(v, (int, float))},
+                   roofline=roof.to_dict())
+    except Exception as e:  # record the failure — these are bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    rec["wall_s"] = time.time() - t0
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES), help="shape (default: all)")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--all", action="store_true", help="all archs x shapes")
+    ap.add_argument("--force", action="store_true", help="ignore cache")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    ap.add_argument("--zero-stage", type=int, default=3)
+    ap.add_argument("--zero-scope", default="global", choices=["global", "pod"])
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--tiling", type=int, default=1)
+    ap.add_argument("--pure-dp", action="store_true",
+                    help="paper-faithful: no tensor slicing, dp over all axes")
+    ap.add_argument("--moe-zero-stage", type=int, default=3)
+    ap.add_argument("--engine", default="pjit", choices=["pjit", "zero3"],
+                    help="zero3 = explicit shard_map collective schedule")
+    ap.add_argument("--prefetch", type=int, default=1)
+    ap.add_argument("--score-dtype", default="float32", choices=["float32", "bfloat16"])
+    ap.add_argument("--attn-chunk", type=int, default=256)
+    ap.add_argument("--moe-combine-dtype", default="float32", choices=["float32", "bfloat16"])
+    ap.add_argument("--offload", default="device", choices=["device", "host"])
+    ap.add_argument("--tag", default="", help="suffix for the result file")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(configs.ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
+    parallel = ParallelConfig(zero_stage=args.zero_stage, zero_scope=args.zero_scope,
+                              remat=args.remat, tiling_factor=args.tiling,
+                              pure_dp=args.pure_dp, moe_zero_stage=args.moe_zero_stage,
+                              engine=args.engine, prefetch=args.prefetch)
+    offload = OffloadConfig(param_tier="device",
+                            opt_tier=args.offload)
+    overrides = {}
+    if args.score_dtype != "float32":
+        overrides["score_dtype"] = args.score_dtype
+    if args.moe_combine_dtype != "float32":
+        overrides["moe_combine_dtype"] = args.moe_combine_dtype
+    if args.attn_chunk != 256:
+        overrides["attn_chunk"] = args.attn_chunk
+
+    n_ok = n_skip = n_err = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                rec = run_cell(arch, shape_name, mesh_name, parallel=parallel,
+                               offload=offload, out_dir=args.out,
+                               force=args.force, tag=args.tag,
+                               model_overrides=overrides or None)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_err += st == "error"
+                extra = ""
+                if st == "ok":
+                    r = rec["roofline"]
+                    extra = (f"flops/chip={r['flops']:.3e} "
+                             f"bottleneck={r['bottleneck']} "
+                             f"roofline={r['roofline_fraction']:.3f} "
+                             f"[{rec['wall_s']:.0f}s]")
+                elif st == "error":
+                    extra = rec["error"][:120]
+                print(f"[{mesh_name}] {arch:24s} {shape_name:12s} {st:8s} {extra}",
+                      flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

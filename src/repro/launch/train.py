@@ -1,0 +1,177 @@
+"""End-to-end training driver: data pipeline -> engine -> checkpoints,
+with fault injection / restart, straggler monitoring, and the NVMe-tier
+optimizer path.
+
+Examples (CPU, reduced configs):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+      --steps 50 --batch 8 --seq 128
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+      --steps 30 --offload-opt nvme          # streamed NVMe optimizer
+  REPRO_FAIL_AT_STEP=7 REPRO_FAIL_MARKER=/tmp/m PYTHONPATH=src \
+      python -m repro.launch.train ... --resume auto   # restart drill
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import (OffloadConfig, ParallelConfig, RunConfig, ShapeConfig,
+                          TrainConfig)
+from repro.core.engine import ZeroInfinityEngine
+from repro.core.offload import ChunkedAdamOffload, NvmeStore
+from repro.data.pipeline import PrefetchLoader, SyntheticStream
+from repro.launch.mesh import make_local_mesh, maybe_init_distributed
+from repro.runtime.fault import FailureInjector, retry_loop
+from repro.runtime.metrics import MetricsLogger
+from repro.runtime.fault import StragglerMonitor
+
+
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--data-mesh", type=int, default=1)
+    ap.add_argument("--model-mesh", type=int, default=1)
+    ap.add_argument("--zero-stage", type=int, default=3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--offload-opt", default="device", choices=["device", "host", "nvme"])
+    ap.add_argument("--nvme-dir", default="/tmp/repro_nvme")
+    ap.add_argument("--no-overlap", action="store_true", help="disable NVMe overlap")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", default="no", choices=["no", "auto"])
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def make_run(args) -> RunConfig:
+    cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    return RunConfig(
+        model=cfg,
+        parallel=ParallelConfig(zero_stage=args.zero_stage, grad_accum=args.grad_accum),
+        offload=OffloadConfig(opt_tier=args.offload_opt, nvme_dir=args.nvme_dir,
+                              overlap=not args.no_overlap),
+        train=TrainConfig(lr=args.lr, steps=args.steps, checkpoint_dir=args.ckpt_dir,
+                          checkpoint_every=args.ckpt_every, seed=args.seed),
+    )
+
+
+def train(args) -> dict:
+    maybe_init_distributed()
+    run = make_run(args)
+    mesh = make_local_mesh(args.data_mesh, args.model_mesh)
+    eng = ZeroInfinityEngine(run, mesh)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    nvme = run.offload.opt_tier == "nvme"
+
+    ckpt = CheckpointManager(run.train.checkpoint_dir, keep=run.train.keep_checkpoints)
+    injector = FailureInjector()
+    straggler = StragglerMonitor()
+    history = {"losses": [], "restarts": 0}
+
+    def run_once():
+        state = eng.init_state(jax.random.PRNGKey(run.train.seed))
+        start_step = 0
+        if args.resume == "auto" and ckpt.latest_step() is not None:
+            state, extra = ckpt.restore(state, shardings=None)
+            state = jax.tree.map(jnp.asarray, state)
+            start_step = extra["next_step"]
+            print(f"resumed from checkpoint at step {start_step}")
+
+        offload_opt = None
+        if nvme:
+            store = NvmeStore(run.offload.nvme_dir,
+                              pool_mb=run.offload.pinned_buffer_mb,
+                              overlap=run.offload.overlap)
+            offload_opt = ChunkedAdamOffload(store)
+            flat = {k: np.asarray(v) for k, v in _flatten(state["params"]).items()}
+            offload_opt.init_from_params(flat)
+            offload_opt.step_count = start_step
+
+        step_fn = jax.jit(eng.make_train_step(grads_only=nvme))
+        specs = eng.bundle.input_specs(shape)
+        stream = SyntheticStream(specs, run.model.vocab_size, seed=run.train.seed)
+        shardings = {k: eng.batch_sharding(v) for k, v in specs.items()}
+        loader = PrefetchLoader(stream, start_step, run.train.steps, shardings)
+        logger = MetricsLogger(model_flops_per_token=eng.bundle.n_params_active(),
+                               n_chips=len(mesh.devices.flat))
+        tokens = shape.global_batch * shape.seq_len
+
+        with jax.set_mesh(mesh):
+            for step, batch in loader:
+                straggler.start()
+                injector.maybe_fail(step)
+                if nvme:
+                    grads, metrics = step_fn(state, batch)
+                    gflat = {k: np.asarray(v, np.float32)
+                             for k, v in _flatten(grads).items()}
+                    new_flat = offload_opt.step(
+                        gflat, lr=float(adam_lr(run.train, step + 1)),
+                        beta1=run.train.beta1, beta2=run.train.beta2,
+                        eps=run.train.eps, weight_decay=run.train.weight_decay)
+                    state = {"params": _unflatten(state["params"], new_flat),
+                             "opt": state["opt"]}
+                else:
+                    state, metrics = step_fn(state, batch)
+                loss = float(metrics["loss"])
+                dt = straggler.stop(step)
+                history["losses"].append(loss)
+                if step % args.log_every == 0:
+                    logger.log(step, loss, tokens, dt)
+                if run.train.checkpoint_every and (step + 1) % run.train.checkpoint_every == 0:
+                    ckpt.save(step + 1, state, {"next_step": step + 1})
+        ckpt.wait()
+        history["final_state"] = state
+        if nvme:
+            history["nvme_stats"] = offload_opt.store.bandwidth_stats()
+
+    history["restarts"] = retry_loop(
+        run_once, on_restart=lambda n, e: print(f"restart #{n} after: {e}"))
+    if straggler.flagged:
+        print(f"straggler steps flagged: {straggler.flagged}")
+    return history
+
+
+def adam_lr(tc: TrainConfig, step: int) -> float:
+    return tc.lr * min(step / max(tc.warmup_steps, 1), 1.0)
+
+
+def _flatten(tree) -> dict:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def _unflatten(like, flat: dict):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    vals = [jnp.asarray(flat[jax.tree_util.keystr(path)]).astype(leaf.dtype)
+            for path, leaf in leaves]
+    return jax.tree.unflatten(jax.tree.structure(like), vals)
+
+
+def main() -> None:
+    args = build_argparser().parse_args()
+    t0 = time.time()
+    hist = train(args)
+    losses = hist["losses"]
+    print(f"done in {time.time()-t0:.1f}s | first loss {losses[0]:.4f} | "
+          f"last loss {losses[-1]:.4f} | restarts {hist['restarts']}")
+    if "nvme_stats" in hist:
+        s = hist["nvme_stats"]
+        print(f"nvme: read {s['read_gbps']:.2f} GB/s, write {s['write_gbps']:.2f} GB/s, "
+              f"pinned peak {s['pinned_peak_bytes']>>20} MiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,366 @@
+"""Shared model layers: norms, RoPE, attention (TP-heads / context-parallel),
+MLP variants, embeddings.
+
+Pure-jnp, sharding-agnostic math; distribution enters only through
+``partition.constrain`` annotations so the same code runs on 1 CPU device
+(smoke tests) and on the 512-chip production mesh (dry-run). Attention is
+written chunked (online softmax over KV blocks) so peak activation memory is
+O(chunk^2) not O(seq^2) — the XLA-level analogue of the Pallas flash kernel in
+``kernels/flash_attention.py`` (which is the TPU perf path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import partition as pt
+
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def norm(x: jax.Array, p: dict, kind: str) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def norm_defs(d: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": pt.ParamDef((d,), ("embed",), "float32", "zeros")}
+    return {
+        "scale": pt.ParamDef((d,), ("embed",), "float32", "ones"),
+        "bias": pt.ParamDef((d,), ("embed",), "float32", "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # (..., seq, half)
+    angles = angles[..., :, None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attn_defs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "wq": pt.ParamDef((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": pt.ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": pt.ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": pt.ParamDef((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, KV, D)
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: int = 0,  # absolute position of q[0] relative to k[0]
+    window: int = 0,  # local attention window (0 = global)
+    q_chunk: int = 256,
+    kv_chunk: int = 256,
+    softcap: float = 0.0,
+    score_dtype=jnp.float32,
+) -> jax.Array:
+    """Memory-efficient attention: sequential scan over KV chunks with online
+    softmax; Q chunks live in a BATCHED dim (nq). Peak score tensor =
+    (B, nq, H, q_chunk, kv_chunk).
+
+    Sharding note: nq is a plain batch dim, so a `seq`->`model`
+    (context-parallel) sharding on Q survives into the loop — a lax.map over
+    q-chunks would force the scanned dim to replicate across the mesh (XLA
+    cannot shard a sequential loop counter), costing a model-axis-fold of
+    redundant compute. Found via the roofline parser; see EXPERIMENTS.md.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    n_rep = H // KV
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = D ** -0.5
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq, nk = -(-Sq // q_chunk), -(-Sk // kv_chunk)
+    # pad to whole chunks
+    q = jnp.pad(q, ((0, 0), (0, nq * q_chunk - Sq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, nk * kv_chunk - Sk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, nk * kv_chunk - Sk), (0, 0), (0, 0)))
+
+    q_pos = (q_offset + jnp.arange(nq * q_chunk)).reshape(nq, q_chunk)
+    k_pos = jnp.arange(nk * kv_chunk).reshape(nk, kv_chunk)
+    k_valid = (jnp.arange(nk * kv_chunk) < Sk).reshape(nk, kv_chunk)
+
+    qc = q.reshape(B, nq, q_chunk, H, D)  # nq stays a shardable batch dim
+    kc = jnp.moveaxis(k.reshape(B, nk, kv_chunk, H, D), 1, 0)  # (nk,B,kc,H,D)
+    vc = jnp.moveaxis(v.reshape(B, nk, kv_chunk, H, D), 1, 0)
+
+    sdt = jnp.dtype(score_dtype)
+
+    def kv_step(carry, kv_args):
+        m, l, o = carry  # (B,nq,H,qc) f32, ..., (B,nq,H,qc,D) f32
+        ki, vi, kp, kval = kv_args  # (B,kc,H,D), ..., (kc,), (kc,)
+        # the big (qc x kc) score tensor lives in score_dtype (bf16 halves
+        # its HBM traffic — the dominant memory term at long seq); the
+        # running max/denominator stay f32 for stability.
+        s = jnp.einsum("bnqhd,bkhd->bnhqk", qc, ki,
+                       preferred_element_type=sdt) * jnp.asarray(scale, sdt)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = kval[None, None, None, None, :]
+        qp = q_pos[None, :, None, :, None]  # (1,nq,1,qc,1)
+        kpb = kp[None, None, None, None, :]
+        if causal:
+            mask = mask & (kpb <= qp)
+        if window > 0:
+            mask = mask & (kpb > qp - window)
+        s = jnp.where(mask, s, jnp.asarray(NEG_INF, sdt))
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1).astype(jnp.float32))
+        p = jnp.exp(s - m_new[..., None].astype(sdt))
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bnhqk,bkhd->bnhqd", p.astype(vi.dtype), vi,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, o_new), ()
+
+    m0 = jnp.full((B, nq, H, q_chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, H, q_chunk), jnp.float32)
+    o0 = jnp.zeros((B, nq, H, q_chunk, D), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0), (kc, vc, k_pos, k_valid))
+    out = o / jnp.maximum(l[..., None], 1e-30)  # (B,nq,H,qc,D)
+    out = jnp.moveaxis(out, 2, 3).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, KV, D)
+    v_cache: jax.Array,
+    cache_len: jax.Array | int,  # valid prefix length(s)
+    *,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """One-token attention against a long cache.
+
+    Written as a stable softmax over the (possibly seq-sharded) cache axis:
+    under GSPMD with the cache sharded over `model`, the max/sum/contract
+    reductions lower to the flash-decode partial-softmax + combine pattern.
+    """
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    n_rep = H // KV
+    scale = D ** -0.5
+    qh = q[:, 0].reshape(B, KV, n_rep, D)
+    s = jnp.einsum("bknd,bskd->bkns", qh, k_cache, preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = jnp.arange(S)[None, None, None, :] < jnp.asarray(cache_len).reshape(-1, 1, 1, 1)
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkns,bskd->bknd", (p / l).astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention_block(
+    p: dict,
+    x: jax.Array,  # (B, S, d_model)
+    positions: jax.Array,
+    cfg: ModelConfig,
+    rules: pt.AxisRules,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    cache: Optional[dict] = None,  # decode: {"k","v","len"}
+    kv_source: Optional[jax.Array] = None,  # cross-attention memory
+    collect_kv: bool = False,  # prefill: also return this block's (k, v)
+) -> tuple[jax.Array, Optional[dict]]:
+    """Full attention sub-block: qkv proj -> rope -> attention -> out proj.
+
+    Returns (output, updated_cache_or_collected_kv). For decode, x has S=1
+    and ``cache`` holds (B, S_cache, KV, D) rings.
+    """
+    B, S, _ = x.shape
+    xs = kv_source if kv_source is not None else x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    kx = jnp.einsum("bsd,dhk->bshk", xs, p["wk"].astype(x.dtype))
+    vx = jnp.einsum("bsd,dhk->bshk", xs, p["wv"].astype(x.dtype))
+    if kv_source is None:  # self-attention: rope at absolute positions
+        q = rope(q, positions, cfg.rope_theta)
+        kx = rope(kx, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # decode: write the new K/V at the filled-prefix offset (or an
+        # explicit ring position for window-bounded caches)
+        k_cache, v_cache, clen = cache["k"], cache["v"], cache["len"]
+        write_pos = cache.get("write_pos", clen)
+        valid_len = cache.get("valid_len", clen + S)
+        k_cache = _scatter_cache(k_cache, kx, write_pos)
+        v_cache = _scatter_cache(v_cache, vx, write_pos)
+        new_cache = {"k": k_cache, "v": v_cache, "len": clen + S}
+        q = pt.constrain(q, rules, ("batch", None, "act_heads", None))
+        out = decode_attention(q, k_cache, v_cache, valid_len)
+    else:
+        q = pt.constrain(q, rules, ("batch", "seq", "act_heads", None))
+        kx = pt.constrain(kx, rules, ("batch", "kv_seq", None, None))
+        vx = pt.constrain(vx, rules, ("batch", "kv_seq", None, None))
+        out = chunked_attention(q, kx, vx, causal=causal and kv_source is None,
+                                window=window, score_dtype=cfg.score_dtype,
+                                q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+        if collect_kv:
+            new_cache = {"k": kx.astype(jnp.bfloat16), "v": vx.astype(jnp.bfloat16)}
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"].astype(x.dtype))
+    return pt.constrain(out, rules, ("batch", "seq", None)), new_cache
+
+
+def _scatter_cache(cache: jax.Array, new: jax.Array, pos) -> jax.Array:
+    """Write ``new`` (B, S_new, KV, D) at offset ``pos`` along the seq dim.
+
+    Uses one-hot matmul form instead of dynamic_update_slice so that the
+    update stays efficient when the cache's seq dim is sharded over `model`
+    (dynamic-slice on a sharded dim forces a full re-gather in SPMD).
+    """
+    S = cache.shape[1]
+    pos = jnp.asarray(pos)
+    idx = pos.reshape(-1, 1) + jnp.arange(new.shape[1])[None, :]  # (B|1, S_new)
+    onehot = jax.nn.one_hot(idx, S, dtype=cache.dtype)  # (B|1, S_new, S)
+    add = jnp.einsum("bns,bnkd->bskd", onehot, new.astype(cache.dtype))
+    keep = 1.0 - jnp.max(onehot, axis=1)  # (B|1, S)
+    return cache * keep[..., None, None].astype(cache.dtype) + add
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    gated = cfg.mlp_kind in ("swiglu", "geglu")
+    defs = {
+        "w_in": pt.ParamDef((d, f), ("embed", "mlp")),
+        "w_out": pt.ParamDef((f, d), ("mlp", "embed")),
+    }
+    if gated:
+        defs["w_gate"] = pt.ParamDef((d, f), ("embed", "mlp"))
+    return defs
+
+
+def mlp_block(p: dict, x: jax.Array, cfg: ModelConfig, rules: pt.AxisRules,
+              tiling_factor: int = 1) -> jax.Array:
+    from repro.core.tiling import tiled_matmul_xla  # local import to avoid cycle
+
+    kind = cfg.mlp_kind
+
+    def up(w):
+        return tiled_matmul_xla(x, w.astype(x.dtype), tiling_factor)
+
+    h = up(p["w_in"])
+    if kind == "swiglu":
+        h = jax.nn.silu(up(p["w_gate"])) * h
+    elif kind == "geglu":
+        h = jax.nn.gelu(up(p["w_gate"])) * h
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    h = pt.constrain(h, rules, ("batch", "seq", "act_mlp"))
+    out = tiled_matmul_xla(h, p["w_out"].astype(x.dtype), tiling_factor)
+    return pt.constrain(out, rules, ("batch", "seq", None))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(cfg: ModelConfig) -> dict:
+    v = cfg.padded_vocab()
+    defs = {"tok": pt.ParamDef((v, cfg.d_model), ("vocab", "embed"), init="normal")}
+    if not cfg.tie_embeddings:
+        defs["unembed"] = pt.ParamDef((cfg.d_model, v), ("embed", "vocab"))
+    return defs
+
+
+def embed(p: dict, tokens: jax.Array, cfg: ModelConfig, rules: pt.AxisRules) -> jax.Array:
+    x = p["tok"].astype(jnp.bfloat16)[tokens]
+    if cfg.arch.startswith("gemma") or cfg.arch.startswith("recurrentgemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return pt.constrain(x, rules, ("batch", "seq", None))
+
+
+def logits(p: dict, x: jax.Array, cfg: ModelConfig, rules: pt.AxisRules) -> jax.Array:
+    if cfg.tie_embeddings:
+        out = jnp.einsum("bsd,vd->bsv", x, p["tok"].astype(x.dtype))
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, p["unembed"].astype(x.dtype))
+    if cfg.logit_softcap > 0.0:
+        out = jnp.tanh(out / cfg.logit_softcap) * cfg.logit_softcap
+    return out
+
+
+def lm_loss(lg: jax.Array, labels: jax.Array, vocab_size: int) -> jax.Array:
+    """Cross-entropy over (possibly padded) vocab; labels (B, S) int32."""
+    lg = lg.astype(jnp.float32)
+    pad = lg.shape[-1] - vocab_size
+    if pad > 0:
+        mask = jnp.arange(lg.shape[-1]) < vocab_size
+        lg = jnp.where(mask, lg, NEG_INF)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,193 @@
+"""Seamless-M4T-medium backbone: encoder-decoder transformer.
+
+The speech frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, d_model). 12 encoder layers
+(bidirectional self-attn) + 12 decoder layers (causal self-attn +
+cross-attn). Sequence budget per cell (documented in EXPERIMENTS.md):
+train/prefill use enc_len = seq_len, dec_len = seq_len // 4; decode cells
+use a decoder self-KV cache of depth seq_len with enc memory seq_len // 4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ParallelConfig, ShapeConfig
+from repro.core import partition as pt
+from repro.models import common as cm
+from repro.models import transformer as tf
+
+
+def _stack(defs, n):
+    return jax.tree.map(
+        lambda d: pt.ParamDef((n,) + d.shape, ("layers",) + d.axes, d.dtype, d.init, d.init_scale),
+        defs,
+        is_leaf=lambda x: isinstance(x, pt.ParamDef),
+    )
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    enc_block = {
+        "ln1": cm.norm_defs(cfg.d_model, cfg.norm_kind),
+        "attn": cm.attn_defs(cfg),
+        "ln2": cm.norm_defs(cfg.d_model, cfg.norm_kind),
+        "mlp": cm.mlp_defs(cfg),
+    }
+    dec_block = {
+        "ln1": cm.norm_defs(cfg.d_model, cfg.norm_kind),
+        "self_attn": cm.attn_defs(cfg),
+        "ln_x": cm.norm_defs(cfg.d_model, cfg.norm_kind),
+        "cross_attn": cm.attn_defs(cfg),
+        "ln2": cm.norm_defs(cfg.d_model, cfg.norm_kind),
+        "mlp": cm.mlp_defs(cfg),
+    }
+    return {
+        "embed": cm.embed_defs(cfg),
+        "enc": _stack(enc_block, cfg.n_enc_layers),
+        "dec": _stack(dec_block, cfg.n_dec_layers),
+        "ln_enc": cm.norm_defs(cfg.d_model, cfg.norm_kind),
+        "ln_f": cm.norm_defs(cfg.d_model, cfg.norm_kind),
+    }
+
+
+def dec_lens(shape: ShapeConfig) -> tuple[int, int]:
+    """(enc_len, dec_len) per cell."""
+    if shape.kind == "decode":
+        return shape.seq_len // 4, shape.seq_len
+    return shape.seq_len, max(shape.seq_len // 4, 1)
+
+
+def make_fns(cfg: ModelConfig, rules: pt.AxisRules, parallel: ParallelConfig):
+    policy = tf._remat_policy(parallel)
+    tiles = parallel.tiling_factor
+
+    def enc_forward(params, frames):
+        x = pt.constrain(frames.astype(jnp.bfloat16), rules, ("batch", "seq", None))
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+        def body(h, blk):
+            a, _ = cm.attention_block(blk["attn"], cm.norm(h, blk["ln1"], cfg.norm_kind),
+                                      positions, cfg, rules, causal=False)
+            h = h + a
+            m = cm.mlp_block(blk["mlp"], cm.norm(h, blk["ln2"], cfg.norm_kind), cfg, rules, tiles)
+            return h + m, ()
+
+        if parallel.remat != "none":
+            body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return cm.norm(x, params["ln_enc"], cfg.norm_kind)
+
+    def dec_block(h, blk, positions, memory, self_cache=None, cross_kv=None, collect_kv=False):
+        a, new_self = cm.attention_block(
+            blk["self_attn"], cm.norm(h, blk["ln1"], cfg.norm_kind), positions, cfg, rules,
+            causal=True, cache=self_cache, collect_kv=collect_kv)
+        h = h + a
+        xn = cm.norm(h, blk["ln_x"], cfg.norm_kind)
+        if cross_kv is not None:  # decode: attend to precomputed memory K/V
+            q = jnp.einsum("bsd,dhk->bshk", xn, blk["cross_attn"]["wq"].astype(xn.dtype))
+            o = cm.decode_attention(q, cross_kv["k"], cross_kv["v"], cross_kv["k"].shape[1])
+            c = jnp.einsum("bshk,hkd->bsd", o.astype(xn.dtype),
+                           blk["cross_attn"]["wo"].astype(xn.dtype))
+        else:
+            c, _ = cm.attention_block(blk["cross_attn"], xn, positions, cfg, rules,
+                                      causal=False, kv_source=memory)
+        h = h + c
+        m = cm.mlp_block(blk["mlp"], cm.norm(h, blk["ln2"], cfg.norm_kind), cfg, rules, tiles)
+        return h + m, new_self
+
+    # ------------------------------ train ---------------------------------
+
+    def loss_fn(params, batch):
+        memory = enc_forward(params, batch["frames"])
+        tokens = batch["tokens"]
+        x = cm.embed(params["embed"], tokens, cfg, rules)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+        def body(h, blk):
+            out, _ = dec_block(h, blk, positions, memory)
+            return out, ()
+
+        if parallel.remat != "none":
+            body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        x = cm.norm(x, params["ln_f"], cfg.norm_kind)
+        lg = cm.logits(params["embed"], x, cfg, rules)
+        return cm.lm_loss(lg[:, :-1], batch["labels"][:, 1:], cfg.vocab_size)
+
+    # ----------------------------- serving --------------------------------
+
+    def cache_defs(batch: int, cache_len: int) -> dict:
+        L, KV, D = cfg.n_dec_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        enc_len = max(cache_len // 4, 1)
+        return {
+            "k": pt.ParamDef((L, batch, cache_len, KV, D),
+                             ("layers", "batch", "cache_seq", "kv_heads", "head_dim")),
+            "v": pt.ParamDef((L, batch, cache_len, KV, D),
+                             ("layers", "batch", "cache_seq", "kv_heads", "head_dim")),
+            "xk": pt.ParamDef((L, batch, enc_len, KV, D),
+                              ("layers", "batch", "cache_seq", "kv_heads", "head_dim")),
+            "xv": pt.ParamDef((L, batch, enc_len, KV, D),
+                              ("layers", "batch", "cache_seq", "kv_heads", "head_dim")),
+            "len": pt.ParamDef((), (), "int32", "zeros"),
+        }
+
+    def prefill(params, batch):
+        memory = enc_forward(params, batch["frames"])
+        tokens = batch["tokens"]
+        x = cm.embed(params["embed"], tokens, cfg, rules)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+        def body(h, blk):
+            out, kv = dec_block(h, blk, positions, memory, collect_kv=True)
+            xk = jnp.einsum("bsd,dhk->bshk", memory, blk["cross_attn"]["wk"].astype(memory.dtype))
+            xv = jnp.einsum("bsd,dhk->bshk", memory, blk["cross_attn"]["wv"].astype(memory.dtype))
+            return out, (kv["k"], kv["v"], xk.astype(jnp.bfloat16), xv.astype(jnp.bfloat16))
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["dec"])
+        x = cm.norm(x, params["ln_f"], cfg.norm_kind)
+        lg = cm.logits(params["embed"], x[:, -1:], cfg, rules)
+        return lg, {"k": ks, "v": vs, "xk": xks, "xv": xvs,
+                    "len": jnp.asarray(S, jnp.int32)}
+
+    def decode_step(params, cache, batch):
+        x = cm.embed(params["embed"], batch["tokens"], cfg, rules)
+        B = x.shape[0]
+        clen = cache["len"]
+        positions = jnp.broadcast_to(clen, (B, 1))
+
+        def body(h, layer):
+            blk, kc, vc, xk, xv = layer
+            out, nc = dec_block(h, blk, positions, None,
+                                self_cache={"k": kc, "v": vc, "len": clen},
+                                cross_kv={"k": xk, "v": xv})
+            return out, (nc["k"], nc["v"])
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec"], cache["k"], cache["v"], cache["xk"], cache["xv"]))
+        x = cm.norm(x, params["ln_f"], cfg.norm_kind)
+        lg = cm.logits(params["embed"], x, cfg, rules)
+        return lg, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"], "len": clen + 1}
+
+    def input_specs(shape: ShapeConfig) -> dict:
+        B = shape.global_batch
+        enc_len, dec_len = dec_lens(shape)
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        specs = {
+            "frames": jax.ShapeDtypeStruct((B, enc_len, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, dec_len), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, dec_len), jnp.int32)
+        return specs
+
+    return {
+        "loss": loss_fn,
+        "prefill": prefill,
+        "decode_step": decode_step,
+        "cache_defs": cache_defs,
+        "input_specs": input_specs,
+    }

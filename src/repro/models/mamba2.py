@@ -1,0 +1,287 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060), TPU-adapted.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+matmuls *within* chunks + a linear recurrence *across* chunk states. This is
+matmul-dominant (MXU-friendly) — the TPU-native adaptation of the paper's
+CUDA kernel. Decode is the O(1) recurrent update, so `long_500k` runs with a
+constant-size state instead of a KV cache.
+
+Sharding: heads/d_inner shard over `model` ("inner" logical axis); B/C
+projections (state dim N) are replicated (small); d_model dims carry the
+ZeRO-3 "embed" axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ParallelConfig, ShapeConfig
+from repro.core import partition as pt
+from repro.models import common as cm
+from repro.models import transformer as tf
+
+NEG_INF = -1e30
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    return d_in, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def block_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, H, P, N = _dims(cfg)
+    w = cfg.conv_width
+    L = cfg.n_layers
+
+    per_layer = {
+        "ln": cm.norm_defs(d, cfg.norm_kind),
+        "w_z": pt.ParamDef((d, d_in), ("embed", "inner")),
+        "w_x": pt.ParamDef((d, d_in), ("embed", "inner")),
+        "w_B": pt.ParamDef((d, N), ("embed", "state")),
+        "w_C": pt.ParamDef((d, N), ("embed", "state")),
+        "w_dt": pt.ParamDef((d, H), ("embed", "inner")),
+        "conv_x": pt.ParamDef((w, d_in), ("conv", "inner"), "float32", "fan_in"),
+        "conv_B": pt.ParamDef((w, N), ("conv", "state"), "float32", "fan_in"),
+        "conv_C": pt.ParamDef((w, N), ("conv", "state"), "float32", "fan_in"),
+        "A_log": pt.ParamDef((H,), ("inner",), "float32", "zeros"),
+        "D": pt.ParamDef((H,), ("inner",), "float32", "ones"),
+        "dt_bias": pt.ParamDef((H,), ("inner",), "float32", "zeros"),
+        "gn": pt.ParamDef((d_in,), ("inner",), "float32", "zeros"),
+        "w_out": pt.ParamDef((d_in, d), ("inner", "embed")),
+    }
+    return jax.tree.map(
+        lambda p: pt.ParamDef((L,) + p.shape, ("layers",) + p.axes, p.dtype, p.init, p.init_scale),
+        per_layer,
+        is_leaf=lambda x: isinstance(x, pt.ParamDef),
+    )
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    return {"embed": cm.embed_defs(cfg), "blocks": block_defs(cfg),
+            "ln_f": cm.norm_defs(cfg.d_model, cfg.norm_kind)}
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state=None):
+    """Depthwise causal conv as width shifted adds. x: (B,S,C), w: (W,C).
+
+    With ``state`` (B, W-1, C) (decode), returns (y, new_state).
+    """
+    W = w.shape[0]
+    if state is not None:
+        full = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        y = sum(full[:, W - 1 - i : full.shape[1] - i] * w[W - 1 - i][None, None, :]
+                for i in range(W))
+        return jax.nn.silu(y), full[:, -(W - 1):]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = sum(pad[:, W - 1 - i : W - 1 - i + x.shape[1]] * w[W - 1 - i][None, None, :]
+            for i in range(W))
+    return jax.nn.silu(y), None
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) -> (..., T, T) with out[i,j] = sum_{k=j+1..i} x_k (i>=j)."""
+    T = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    d = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, d, NEG_INF)
+
+
+def ssd_chunked(xbar, dA, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xbar: (B,S,H,P) discretized inputs; dA: (B,S,H) log-decays (<=0);
+    Bm/Cm: (B,S,N). Returns (y (B,S,H,P), final state (B,H,P,N)).
+    """
+    Bsz, S, H, P = xbar.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:  # zero padding is exact: decay exp(0)=1, contribution B*xbar=0
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_out = S
+    S = S + pad
+    nc = S // Q
+
+    x = xbar.reshape(Bsz, nc, Q, H, P)
+    a = dA.reshape(Bsz, nc, Q, H).transpose(0, 1, 3, 2).astype(jnp.float32)  # (B,nc,H,Q)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    cum = jnp.cumsum(a, axis=-1)  # (B,nc,H,Q)
+    L = jnp.exp(_segsum(a))  # (B,nc,H,Q,Q)
+
+    # Intra-chunk (quadratic, attention-like):
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", Cc, Bc, L.astype(Cc.dtype), x,
+                        preferred_element_type=jnp.float32)
+
+    # Chunk state contributions:
+    decay_states = jnp.exp(cum[..., -1:] - cum)  # (B,nc,H,Q): decay pos->chunk end
+    states = jnp.einsum("bcsn,bchs,bcshp->bchpn", Bc, decay_states.astype(Bc.dtype), x,
+                        preferred_element_type=jnp.float32)
+
+    # Inter-chunk recurrence over nc:
+    chunk_decay = jnp.exp(cum[..., -1])  # (B,nc,H)
+
+    def step(h, inputs):
+        dec, s = inputs  # (B,H), (B,H,P,N)
+        h_new = h * dec[..., None, None] + s
+        return h_new, h  # emit state *entering* the chunk
+
+    h_init = jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        step, h_init, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4))
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    state_decay_in = jnp.exp(cum)  # decay chunk-start -> pos (inclusive)
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", Cc, h_prev.astype(Cc.dtype),
+                       state_decay_in.astype(Cc.dtype), preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)[:, :S_out]
+    return y, h_last
+
+
+def mamba_block(p, x, cfg, rules, cache=None, collect_state=False):
+    """x: (B,S,d). cache: {"conv_x","conv_B","conv_C","state"} for decode;
+    ``collect_state`` (prefill) returns the equivalent cache in one pass."""
+    d_in, H, P, N = _dims(cfg)
+    W = cfg.conv_width
+    x = cm.norm(x, p["ln"], cfg.norm_kind)  # pre-norm (residual added by caller)
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(x.dtype))
+    xs = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(x.dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(x.dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["w_dt"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+
+    new_cache = {}
+    if cache is None:
+        if collect_state:  # pre-conv tails are the decode conv state
+            new_cache["conv_x"] = xs[:, -(W - 1):].astype(jnp.bfloat16)
+            new_cache["conv_B"] = Bm[:, -(W - 1):].astype(jnp.bfloat16)
+            new_cache["conv_C"] = Cm[:, -(W - 1):].astype(jnp.bfloat16)
+        xs, _ = _causal_conv(xs, p["conv_x"])
+        Bm, _ = _causal_conv(Bm, p["conv_B"])
+        Cm, _ = _causal_conv(Cm, p["conv_C"])
+    else:
+        xs, new_cache["conv_x"] = _causal_conv(xs, p["conv_x"], cache["conv_x"])
+        Bm, new_cache["conv_B"] = _causal_conv(Bm, p["conv_B"], cache["conv_B"])
+        Cm, new_cache["conv_C"] = _causal_conv(Cm, p["conv_C"], cache["conv_C"])
+
+    xh = xs.reshape(*xs.shape[:2], H, P)
+    xbar = xh * dt[..., None].astype(xh.dtype)
+    dA = dt * A  # (B,S,H) log decay
+
+    if cache is None:
+        y, last_state = ssd_chunked(xbar, dA, Bm, Cm, cfg.ssm_chunk)
+        if collect_state:
+            new_cache["state"] = last_state
+    else:
+        # O(1) recurrent decode: h = exp(dA) h + xbar (outer) B ; y = <h, C>
+        h = cache["state"].astype(jnp.float32)  # (B,H,P,N)
+        dec = jnp.exp(dA[:, 0].astype(jnp.float32))  # (B,H)
+        h = h * dec[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xbar[:, 0].astype(jnp.float32), Bm[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", h, Cm[:, 0].astype(jnp.float32))[:, None]
+        new_cache["state"] = h
+        last_state = h
+
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(*y.shape[:2], d_in)
+    y = cm.rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), p["gn"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(y.dtype))
+    out = pt.constrain(out, rules, ("batch", "seq", None))
+    return out, (new_cache if (cache is not None or collect_state) else None)
+
+
+def cache_defs_fn(cfg: ModelConfig):
+    d_in, H, P, N = _dims(cfg)
+    w = cfg.conv_width
+    L = cfg.n_layers
+
+    def cache_defs(batch: int, cache_len: int) -> dict:
+        return {
+            "conv_x": pt.ParamDef((L, batch, w - 1, d_in), ("layers", "batch", None, "inner")),
+            "conv_B": pt.ParamDef((L, batch, w - 1, N), ("layers", "batch", None, "state")),
+            "conv_C": pt.ParamDef((L, batch, w - 1, N), ("layers", "batch", None, "state")),
+            "state": pt.ParamDef((L, batch, H, P, N), ("layers", "batch", "inner", None, "state"), "float32"),
+            "len": pt.ParamDef((), (), "int32", "zeros"),
+        }
+
+    return cache_defs
+
+
+def make_fns(cfg: ModelConfig, rules: pt.AxisRules, parallel: ParallelConfig):
+    policy = tf._remat_policy(parallel)
+
+    def run(params, tokens, collect=False):
+        x = cm.embed(params["embed"], tokens, cfg, rules)
+
+        def body(h, blk):
+            out, _ = mamba_block(blk, h, cfg, rules)
+            return h + out, ()
+
+        if parallel.remat != "none":
+            body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return cm.norm(x, params["ln_f"], cfg.norm_kind)
+
+    def loss_fn(params, batch):
+        x = run(params, batch["tokens"])
+        lg = cm.logits(params["embed"], x, cfg, rules)
+        return cm.lm_loss(lg[:, :-1], batch["labels"][:, 1:], cfg.vocab_size)
+
+    def prefill(params, batch):
+        """Build decode state by running the chunked scan and keeping finals."""
+        tokens = batch["tokens"]
+        x = cm.embed(params["embed"], tokens, cfg, rules)
+
+        def body(h, blk):
+            out, nc = mamba_block(blk, h, cfg, rules, collect_state=True)
+            return h + out, (nc["conv_x"], nc["conv_B"], nc["conv_C"], nc["state"])
+
+        x, (cx, cB, cC, states) = jax.lax.scan(body, x, params["blocks"])
+        x = cm.norm(x, params["ln_f"], cfg.norm_kind)
+        lg = cm.logits(params["embed"], x[:, -1:], cfg, rules)
+        cache = {"conv_x": cx, "conv_B": cB, "conv_C": cC, "state": states,
+                 "len": jnp.asarray(tokens.shape[1], jnp.int32)}
+        return lg, cache
+
+    def decode_step(params, cache, batch):
+        x = cm.embed(params["embed"], batch["tokens"], cfg, rules)
+
+        def body(h, layer):
+            blk, cx, cB, cC, st = layer
+            out, nc = mamba_block(blk, h, cfg, rules,
+                                  cache={"conv_x": cx, "conv_B": cB, "conv_C": cC, "state": st})
+            return h + out, (nc["conv_x"], nc["conv_B"], nc["conv_C"], nc["state"])
+
+        x, (cx, cB, cC, st) = jax.lax.scan(
+            body, x, (params["blocks"], cache["conv_x"], cache["conv_B"], cache["conv_C"], cache["state"]))
+        x = cm.norm(x, params["ln_f"], cfg.norm_kind)
+        lg = cm.logits(params["embed"], x, cfg, rules)
+        return lg, {"conv_x": cx, "conv_B": cB, "conv_C": cC, "state": st, "len": cache["len"] + 1}
+
+    def input_specs(shape: ShapeConfig) -> dict:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs
+
+    return {
+        "loss": loss_fn,
+        "prefill": prefill,
+        "decode_step": decode_step,
+        "cache_defs": cache_defs_fn(cfg),
+        "input_specs": input_specs,
+    }

@@ -1,0 +1,200 @@
+"""Mixture-of-Experts transformer (llama4-scout 16e top-1, granite 32e top-8).
+
+Dispatch is *sort-based* (MaxText-style), not GShard one-hot-einsum based:
+tokens are argsorted by expert id and gathered into (E, capacity, d) buffers,
+so dispatch/combine cost ~0 FLOPs (gathers + one scatter-add) and the HLO
+FLOPs stay ~= useful expert FLOPs — this keeps the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio honest. Experts shard over the `model` mesh axis
+(EP); activations are model-replicated between blocks, so expert gathers are
+rank-local and the combine is a single psum (comparable traffic to a TP MLP).
+Capacity overflow drops tokens (counted; capacity_factor config).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ParallelConfig, ShapeConfig
+from repro.core import partition as pt
+from repro.models import common as cm
+from repro.models import transformer as tf
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    gated = cfg.mlp_kind in ("swiglu", "geglu")
+    defs = {
+        "router": pt.ParamDef((d, E), ("embed", None), "float32"),
+        "w_in": pt.ParamDef((E, d, f), ("experts", "embed_e", "mlp")),
+        "w_out": pt.ParamDef((E, f, d), ("experts", "mlp", "embed_e")),
+    }
+    if gated:
+        defs["w_gate"] = pt.ParamDef((E, d, f), ("experts", "embed_e", "mlp"))
+    return defs
+
+
+def block_defs(cfg: ModelConfig) -> dict:
+    L = cfg.n_layers
+
+    def stack(defs):
+        return jax.tree.map(
+            lambda d: pt.ParamDef((L,) + d.shape, ("layers",) + d.axes, d.dtype, d.init, d.init_scale),
+            defs,
+            is_leaf=lambda x: isinstance(x, pt.ParamDef),
+        )
+
+    return stack(
+        {
+            "ln1": cm.norm_defs(cfg.d_model, cfg.norm_kind),
+            "attn": cm.attn_defs(cfg),
+            "ln2": cm.norm_defs(cfg.d_model, cfg.norm_kind),
+            "moe": moe_defs(cfg),
+        }
+    )
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    return {"embed": cm.embed_defs(cfg), "blocks": block_defs(cfg),
+            "ln_f": cm.norm_defs(cfg.d_model, cfg.norm_kind)}
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig, rules: pt.AxisRules,
+            group: int = 1024) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d). Sorted-dispatch MoE."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = min(group, S)
+    G = B * (S // T)
+    xg = x.reshape(G, T, d)
+    cap = max(int(T * k * cfg.capacity_factor / E), 1)
+    cap = min(cap, T * k)
+
+    # router in f32-accumulate but with bf16 primal inputs: casting xg to f32
+    # here would promote xg's COTANGENT to f32, which forces the dominant
+    # cross-expert combine psum (dxg) to run in f32 — 2x collective bytes
+    # (found via roofline/breakdown; see EXPERIMENTS.md §Perf llama4 it-2).
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(xg.dtype),
+                        preferred_element_type=jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topg, topi = jax.lax.top_k(gates, k)  # (G,T,k)
+    topg = topg / jnp.sum(topg, axis=-1, keepdims=True)
+
+    flat_e = topi.reshape(G, T * k)
+    flat_w = topg.reshape(G, T * k)
+    order = jnp.argsort(flat_e, axis=1)  # stable
+    e_sorted = jnp.take_along_axis(flat_e, order, axis=1)
+    tok_of_slot = order // k  # token idx for each sorted slot
+
+    counts = jnp.sum(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), axis=1)  # (G,E)
+    starts = jnp.cumsum(counts, axis=1) - counts  # exclusive prefix
+    # (g, e, c) -> sorted-slot index; invalid slots masked
+    slot_ec = starts[:, :, None] + jnp.arange(cap)[None, None, :]  # (G,E,C)
+    valid_ec = jnp.arange(cap)[None, None, :] < counts[:, :, None]
+    slot_ec = jnp.clip(slot_ec, 0, T * k - 1)
+
+    tok_ec = jnp.take_along_axis(tok_of_slot, slot_ec.reshape(G, -1), axis=1).reshape(G, E, cap)
+    w_sorted = jnp.take_along_axis(flat_w, order, axis=1)
+    w_ec = jnp.take_along_axis(w_sorted, slot_ec.reshape(G, -1), axis=1).reshape(G, E, cap)
+    w_ec = jnp.where(valid_ec, w_ec, 0.0)
+
+    gidx = jnp.arange(G)[:, None, None]
+    xin = xg[gidx, tok_ec]  # (G,E,C,d) gather; rank-local w/ model-replicated xg
+    xin = jnp.where(valid_ec[..., None], xin, 0)
+    xin = pt.constrain(xin, rules, ("batch", "experts", None, None))
+
+    h = jnp.einsum("gecd,edf->gecf", xin, p["w_in"].astype(xin.dtype))
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["w_gate"].astype(xin.dtype))) * h
+    elif cfg.mlp_kind == "geglu":
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xin, p["w_gate"].astype(xin.dtype))) * h
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_out"].astype(h.dtype))
+    out = out * w_ec[..., None].astype(out.dtype)
+
+    # token-major combine: scatter-add back to token order; the cross-expert
+    # reduction lowers to the model-axis psum. A gather-based inverse combine
+    # was tried and MEASURED (EXPERIMENTS.md §Perf llama4 it-3): neutral for
+    # top-1 (llama4) but 4x worse collectives for top-8 (granite) — its
+    # backward re-scatters per k. Scatter-add kept as the default.
+    cdt = jnp.dtype(cfg.moe_combine_dtype)
+    y = jnp.zeros(xg.shape, cdt).at[gidx, tok_ec].add(out.astype(cdt))
+    y = pt.constrain(y, rules, ("batch", None, None))
+    return y.astype(x.dtype).reshape(B, S, d)
+
+
+def make_fns(cfg: ModelConfig, rules: pt.AxisRules, parallel: ParallelConfig):
+    policy = tf._remat_policy(parallel)
+
+    def block(x, blk, positions, cache=None, collect_kv=False):
+        a, new_cache = cm.attention_block(
+            blk["attn"], cm.norm(x, blk["ln1"], cfg.norm_kind), positions, cfg, rules,
+            causal=True, cache=cache, collect_kv=collect_kv,
+        )
+        x = x + a
+        m = moe_ffn(blk["moe"], cm.norm(x, blk["ln2"], cfg.norm_kind), cfg, rules)
+        return x + m, new_cache
+
+    dense = tf.make_fns(cfg, rules, parallel)  # reuse embed/loss/cache scaffolding
+
+    def run_blocks(params, x, positions):
+        def body(h, blk):
+            out, _ = block(h, blk, positions)
+            return out, ()
+
+        if parallel.remat != "none":
+            body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return x
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        x = cm.embed(params["embed"], tokens, cfg, rules)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x = run_blocks(params, x, positions)
+        x = cm.norm(x, params["ln_f"], cfg.norm_kind)
+        lg = cm.logits(params["embed"], x, cfg, rules)
+        return cm.lm_loss(lg[:, :-1], batch["labels"][:, 1:], cfg.vocab_size)
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        x = cm.embed(params["embed"], tokens, cfg, rules)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+        def body(h, blk):
+            out, kv = block(h, blk, positions, collect_kv=True)
+            return out, (kv["k"], kv["v"])
+
+        if parallel.remat != "none":
+            body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+        x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+        x = cm.norm(x, params["ln_f"], cfg.norm_kind)
+        lg = cm.logits(params["embed"], x[:, -1:], cfg, rules)
+        return lg, {"k": ks, "v": vs, "len": jnp.asarray(S, jnp.int32)}
+
+    def decode_step(params, cache, batch):
+        tokens = batch["tokens"]
+        x = cm.embed(params["embed"], tokens, cfg, rules)
+        B = x.shape[0]
+        clen = cache["len"]
+        positions = jnp.broadcast_to(clen, (B, 1))
+
+        def body(h, layer):
+            blk, kc, vc = layer
+            out, nc = block(h, blk, positions, cache={"k": kc, "v": vc, "len": clen})
+            return out, (nc["k"], nc["v"])
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        x = cm.norm(x, params["ln_f"], cfg.norm_kind)
+        lg = cm.logits(params["embed"], x, cfg, rules)
+        return lg, {"k": ks, "v": vs, "len": clen + 1}
+
+    return {
+        "loss": loss_fn,
+        "prefill": prefill,
+        "decode_step": decode_step,
+        "cache_defs": dense["cache_defs"],
+        "input_specs": dense["input_specs"],
+    }

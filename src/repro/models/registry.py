@@ -1,0 +1,77 @@
+"""arch -> ModelBundle: uniform interface over all model families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+
+from repro.config import ModelConfig, ParallelConfig, ShapeConfig
+from repro.core import partition as pt
+from repro.models import transformer, moe, mamba2, rglru, encdec
+
+FAMILY_MODULES = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "ssm": mamba2,
+    "hybrid": rglru,
+    "encdec": encdec,
+}
+
+NULL_RULES = pt.AxisRules(table=())
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    defs: Any  # pytree of ParamDef
+    loss: Callable  # (params, batch) -> scalar
+    prefill: Callable  # (params, batch) -> (logits, cache)
+    decode_step: Callable  # (params, cache, batch) -> (logits, cache)
+    cache_defs: Callable  # (batch, cache_len) -> pytree of ParamDef
+    input_specs: Callable  # (ShapeConfig) -> dict of ShapeDtypeStruct
+
+    def init(self, rng: jax.Array):
+        return pt.init_tree(rng, self.defs)
+
+    def n_params(self) -> int:
+        leaves = jax.tree.leaves(self.defs, is_leaf=lambda x: isinstance(x, pt.ParamDef))
+        total = 0
+        for l in leaves:
+            n = 1
+            for s in l.shape:
+                n *= s
+            total += n
+        return total
+
+    def n_params_active(self) -> int:
+        """MoE: discount inactive experts (for MODEL_FLOPS = 6*N_active*D)."""
+        if self.cfg.family != "moe" or not self.cfg.n_experts:
+            return self.n_params()
+        leaves_with_path = jax.tree_util.tree_flatten_with_path(
+            self.defs, is_leaf=lambda x: isinstance(x, pt.ParamDef))[0]
+        total = 0
+        for path, l in leaves_with_path:
+            n = 1
+            for s in l.shape:
+                n *= s
+            if "experts" in l.axes:
+                n = n * self.cfg.top_k // self.cfg.n_experts
+            total += n
+        return total
+
+
+def build(cfg: ModelConfig, rules: pt.AxisRules = NULL_RULES,
+          parallel: ParallelConfig = ParallelConfig()) -> ModelBundle:
+    mod = FAMILY_MODULES[cfg.family]
+    fns = mod.make_fns(cfg, rules, parallel)
+    return ModelBundle(
+        cfg=cfg,
+        defs=mod.param_defs(cfg),
+        loss=fns["loss"],
+        prefill=fns["prefill"],
+        decode_step=fns["decode_step"],
+        cache_defs=fns["cache_defs"],
+        input_specs=fns["input_specs"],
+    )

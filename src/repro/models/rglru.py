@@ -1,0 +1,338 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU + local attention, 2:1.
+
+Block pattern (rec, rec, attn) scanned over groups; each temporal block is
+followed by a GeGLU MLP. The RG-LRU linear recurrence trains with
+``lax.associative_scan`` (log-depth — the TPU-native replacement for the
+paper's CUDA linear-scan kernel). Decode state: O(1) LRU state + width-4
+conv tail + window-bounded (2048) MQA KV ring -> `long_500k` decodes with a
+constant-size cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ParallelConfig, ShapeConfig
+from repro.core import partition as pt
+from repro.models import common as cm
+from repro.models import transformer as tf
+
+
+def _stack(defs, n: int):
+    return jax.tree.map(
+        lambda d: pt.ParamDef((n,) + d.shape, ("layers",) + d.axes, d.dtype, d.init, d.init_scale),
+        defs,
+        is_leaf=lambda x: isinstance(x, pt.ParamDef),
+    )
+
+
+def rec_defs(cfg: ModelConfig) -> dict:
+    d, r, w = cfg.d_model, cfg.lru_width, cfg.conv_width
+    return {
+        "ln": cm.norm_defs(d, cfg.norm_kind),
+        "w_gate": pt.ParamDef((d, r), ("embed", "inner")),
+        "w_in": pt.ParamDef((d, r), ("embed", "inner")),
+        "conv": pt.ParamDef((w, r), ("conv", "inner"), "float32", "fan_in"),
+        "w_a": pt.ParamDef((r, r), ("embed", "inner")),  # recurrence gate
+        "b_a": pt.ParamDef((r,), ("inner",), "float32", "zeros"),
+        "w_i": pt.ParamDef((r, r), ("embed", "inner")),  # input gate
+        "b_i": pt.ParamDef((r,), ("inner",), "float32", "zeros"),
+        "lam": pt.ParamDef((r,), ("inner",), "float32", "lru_lambda"),
+        "w_out": pt.ParamDef((r, d), ("inner", "embed")),
+    }
+
+
+def attn_sub_defs(cfg: ModelConfig) -> dict:
+    return {"ln": cm.norm_defs(cfg.d_model, cfg.norm_kind), "attn": cm.attn_defs(cfg)}
+
+
+def mlp_sub_defs(cfg: ModelConfig) -> dict:
+    return {"ln": cm.norm_defs(cfg.d_model, cfg.norm_kind), "mlp": cm.mlp_defs(cfg)}
+
+
+def _layout(cfg: ModelConfig):
+    """38 layers @ (rec, rec, attn) -> 12 full groups + 2 tail rec blocks."""
+    pat = len(cfg.block_pattern)  # 3
+    n_groups = cfg.n_layers // pat
+    n_tail = cfg.n_layers - n_groups * pat
+    return n_groups, n_tail
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    n_groups, n_tail = _layout(cfg)
+    group = {
+        "rec1": rec_defs(cfg), "mlp1": mlp_sub_defs(cfg),
+        "rec2": rec_defs(cfg), "mlp2": mlp_sub_defs(cfg),
+        "attn": attn_sub_defs(cfg), "mlp3": mlp_sub_defs(cfg),
+    }
+    defs = {
+        "embed": cm.embed_defs(cfg),
+        "groups": _stack(group, n_groups),
+        "ln_f": cm.norm_defs(cfg.d_model, cfg.norm_kind),
+    }
+    if n_tail:
+        defs["tail"] = _stack({"rec": rec_defs(cfg), "mlp": mlp_sub_defs(cfg)}, n_tail)
+    return defs
+
+
+def rg_lru(x: jax.Array, r_gate: jax.Array, i_gate: jax.Array, lam: jax.Array,
+           h0=None, c: float = 8.0):
+    """x, gates: (B, S, R). Returns (y, h_last). log a = -c*softplus(lam)*r."""
+    log_a = -c * jax.nn.softplus(lam)[None, None, :] * r_gate  # (B,S,R) fp32
+    a = jnp.exp(log_a)
+    gated_x = x * i_gate
+    # multiplier sqrt(1 - a^2) computed stably in log space
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+
+    if x.shape[1] == 1 and h0 is not None:  # decode fast path
+        h = a[:, 0] * h0 + b[:, 0]
+        return h[:, None], h
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        hh = hh + aa * h0[:, None, :]
+    return hh, hh[:, -1]
+
+
+def rec_block(p, x, cfg, rules, cache=None, collect_state=False):
+    """Griffin recurrent block. cache: {"conv": (B,W-1,R), "h": (B,R)}."""
+    W = cfg.conv_width
+    xn = cm.norm(x, p["ln"], cfg.norm_kind)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", xn, p["w_gate"].astype(xn.dtype)))
+    u = jnp.einsum("bsd,dr->bsr", xn, p["w_in"].astype(xn.dtype))
+
+    new_cache = {}
+    if cache is None:
+        if collect_state:
+            new_cache["conv"] = u[:, -(W - 1):].astype(jnp.bfloat16)
+        uc, _ = _causal_conv_silu_free(u, p["conv"])
+    else:
+        uc, new_cache["conv"] = _causal_conv_silu_free(u, p["conv"], cache["conv"])
+
+    uf = uc.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", uf, p["w_a"].astype(jnp.float32)) + p["b_a"])
+    i_gate = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", uf, p["w_i"].astype(jnp.float32)) + p["b_i"])
+    h0 = cache["h"].astype(jnp.float32) if cache is not None else None
+    y, h_last = rg_lru(uf, r_gate, i_gate, p["lam"], h0=h0)
+    if cache is not None or collect_state:
+        new_cache["h"] = h_last
+    y = pt.constrain(y.astype(x.dtype), rules, ("batch", "seq", "act_mlp"))
+    out = jnp.einsum("bsr,rd->bsd", y * gate, p["w_out"].astype(x.dtype))
+    return pt.constrain(out, rules, ("batch", "seq", None)), (new_cache or None)
+
+
+def _causal_conv_silu_free(x, w, state=None):
+    """Depthwise causal conv WITHOUT activation (Griffin applies none)."""
+    W = w.shape[0]
+    if state is not None:
+        full = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        y = sum(full[:, W - 1 - i: full.shape[1] - i] * w[W - 1 - i][None, None, :]
+                for i in range(W))
+        return y, full[:, -(W - 1):]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = sum(pad[:, W - 1 - i: W - 1 - i + x.shape[1]] * w[W - 1 - i][None, None, :]
+            for i in range(W))
+    return y, None
+
+
+def _mlp(p, x, cfg, rules, tiles):
+    return cm.mlp_block(p["mlp"], cm.norm(x, p["ln"], cfg.norm_kind), cfg, rules, tiles)
+
+
+def make_fns(cfg: ModelConfig, rules: pt.AxisRules, parallel: ParallelConfig):
+    policy = tf._remat_policy(parallel)
+    tiles = parallel.tiling_factor
+    n_groups, n_tail = _layout(cfg)
+    window = cfg.window
+
+    def attn_sub(p, x, positions, cache=None, collect_kv=False):
+        a, nc = cm.attention_block(
+            p["attn"], cm.norm(x, p["ln"], cfg.norm_kind), positions, cfg, rules,
+            causal=True, window=window, cache=cache, collect_kv=collect_kv,
+        )
+        return x + a, nc
+
+    def group_fwd(x, g, positions, caches=None, collect=False):
+        """One (rec, mlp, rec, mlp, attn, mlp) group."""
+        c = caches or {}
+        r1, c1 = rec_block(g["rec1"], x, cfg, rules, c.get("rec1"), collect)
+        x = x + r1
+        x = x + _mlp(g["mlp1"], x, cfg, rules, tiles)
+        r2, c2 = rec_block(g["rec2"], x, cfg, rules, c.get("rec2"), collect)
+        x = x + r2
+        x = x + _mlp(g["mlp2"], x, cfg, rules, tiles)
+        x, ca = attn_sub(g["attn"], x, positions, c.get("attn"), collect)
+        x = x + _mlp(g["mlp3"], x, cfg, rules, tiles)
+        return x, {"rec1": c1, "rec2": c2, "attn": ca}
+
+    def tail_fwd(x, t, caches=None, collect=False):
+        c = caches or {}
+        r, cr = rec_block(t["rec"], x, cfg, rules, c.get("rec"), collect)
+        x = x + r
+        x = x + _mlp(t["mlp"], x, cfg, rules, tiles)
+        return x, {"rec": cr}
+
+    # ------------------------------ train ---------------------------------
+
+    def run(params, x, positions):
+        def gbody(h, g):
+            out, _ = group_fwd(h, g, positions)
+            return out, ()
+
+        if parallel.remat != "none":
+            gbody = jax.checkpoint(gbody, policy=policy, prevent_cse=False)
+        x, _ = jax.lax.scan(gbody, x, params["groups"])
+        if n_tail:
+            def tbody(h, t):
+                out, _ = tail_fwd(h, t)
+                return out, ()
+            if parallel.remat != "none":
+                tbody = jax.checkpoint(tbody, policy=policy, prevent_cse=False)
+            x, _ = jax.lax.scan(tbody, x, params["tail"])
+        return x
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        x = cm.embed(params["embed"], tokens, cfg, rules)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x = run(params, x, positions)
+        x = cm.norm(x, params["ln_f"], cfg.norm_kind)
+        lg = cm.logits(params["embed"], x, cfg, rules)
+        return cm.lm_loss(lg[:, :-1], batch["labels"][:, 1:], cfg.vocab_size)
+
+    # ----------------------------- serving --------------------------------
+
+    def cache_defs(batch: int, cache_len: int) -> dict:
+        r, w, KV, D = cfg.lru_width, cfg.conv_width, cfg.n_kv_heads, cfg.resolved_head_dim
+        win = window
+
+        def rec_cache(n):
+            return {
+                "conv": pt.ParamDef((n, batch, w - 1, r), ("layers", "batch", None, "inner")),
+                "h": pt.ParamDef((n, batch, r), ("layers", "batch", "inner"), "float32"),
+            }
+
+        defs = {
+            "groups": {
+                "rec1": rec_cache(n_groups),
+                "rec2": rec_cache(n_groups),
+                "attn": {
+                    "k": pt.ParamDef((n_groups, batch, win, KV, D),
+                                     ("layers", "batch", "cache_seq", "kv_heads", "head_dim")),
+                    "v": pt.ParamDef((n_groups, batch, win, KV, D),
+                                     ("layers", "batch", "cache_seq", "kv_heads", "head_dim")),
+                },
+            },
+            "len": pt.ParamDef((), (), "int32", "zeros"),
+        }
+        if n_tail:
+            defs["tail"] = {"rec": rec_cache(n_tail)}
+        return defs
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        x = cm.embed(params["embed"], tokens, cfg, rules)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        win = min(window, S + 1)
+
+        def ring(k):
+            # lay the last `window` tokens out at slot t % window
+            if S >= window:
+                tail = k[:, S - window:]
+                return jnp.roll(tail, (S - window) % window, axis=1)
+            return jnp.pad(k, ((0, 0), (0, window - S), (0, 0), (0, 0)))
+
+        def gbody(h, g):
+            out, c = group_fwd(h, g, positions, collect=True)
+            kv = c["attn"]
+            return out, (c["rec1"]["conv"], c["rec1"]["h"], c["rec2"]["conv"], c["rec2"]["h"],
+                         ring(kv["k"]), ring(kv["v"]))
+
+        x, (c1c, c1h, c2c, c2h, ks, vs) = jax.lax.scan(gbody, x, params["groups"])
+        caches = {
+            "groups": {
+                "rec1": {"conv": c1c, "h": c1h},
+                "rec2": {"conv": c2c, "h": c2h},
+                "attn": {"k": ks, "v": vs},
+            },
+            "len": jnp.asarray(S, jnp.int32),
+        }
+        if n_tail:
+            def tbody(h, t):
+                out, c = tail_fwd(h, t, collect=True)
+                return out, (c["rec"]["conv"], c["rec"]["h"])
+            x, (tc, th) = jax.lax.scan(tbody, x, params["tail"])
+            caches["tail"] = {"rec": {"conv": tc, "h": th}}
+        x = cm.norm(x, params["ln_f"], cfg.norm_kind)
+        lg = cm.logits(params["embed"], x[:, -1:], cfg, rules)
+        return lg, caches
+
+    def decode_step(params, cache, batch):
+        x = cm.embed(params["embed"], batch["tokens"], cfg, rules)
+        B = x.shape[0]
+        clen = cache["len"]
+        positions = jnp.broadcast_to(clen, (B, 1))
+        g = cache["groups"]
+        win = g["attn"]["k"].shape[2]
+        write_pos = jnp.mod(clen, win)  # ring slot for the new token
+        valid_len = jnp.minimum(clen + 1, win)
+
+        def gbody(h, layer):
+            gp, r1c, r1h, r2c, r2h, kc, vc = layer
+            caches = {
+                "rec1": {"conv": r1c, "h": r1h},
+                "rec2": {"conv": r2c, "h": r2h},
+                "attn": {"k": kc, "v": vc, "len": clen,
+                         "write_pos": write_pos, "valid_len": valid_len},
+            }
+            out, c = group_fwd(h, gp, positions, caches=caches)
+            return out, (c["rec1"]["conv"], c["rec1"]["h"], c["rec2"]["conv"], c["rec2"]["h"],
+                         c["attn"]["k"], c["attn"]["v"])
+
+        x, (r1c, r1h, r2c, r2h, ks, vs) = jax.lax.scan(
+            gbody, x,
+            (params["groups"], g["rec1"]["conv"], g["rec1"]["h"],
+             g["rec2"]["conv"], g["rec2"]["h"], g["attn"]["k"], g["attn"]["v"]))
+        new = {
+            "groups": {
+                "rec1": {"conv": r1c, "h": r1h},
+                "rec2": {"conv": r2c, "h": r2h},
+                "attn": {"k": ks, "v": vs},
+            },
+            "len": clen + 1,
+        }
+        if n_tail:
+            t = cache["tail"]
+            def tbody(h, layer):
+                tp, rc, rh = layer
+                out, c = tail_fwd(h, tp, caches={"rec": {"conv": rc, "h": rh}})
+                return out, (c["rec"]["conv"], c["rec"]["h"])
+            x, (tc, th) = jax.lax.scan(tbody, x, (params["tail"], t["rec"]["conv"], t["rec"]["h"]))
+            new["tail"] = {"rec": {"conv": tc, "h": th}}
+        x = cm.norm(x, params["ln_f"], cfg.norm_kind)
+        lg = cm.logits(params["embed"], x, cfg, rules)
+        return lg, new
+
+    def input_specs(shape: ShapeConfig) -> dict:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs
+
+    return {
+        "loss": loss_fn,
+        "prefill": prefill,
+        "decode_step": decode_step,
+        "cache_defs": cache_defs,
+        "input_specs": input_specs,
+    }

@@ -1,0 +1,63 @@
+"""Gradient compression for cross-pod all-reduce (beyond-paper, ZeRO++-style).
+
+Cross-pod ICI/DCN links are the scarcest bandwidth in a multi-pod mesh; the
+pod-axis gradient all-reduce is pure collective-term overhead. We compress
+that reduction to int8 with per-block scales and *error feedback* (the
+quantization residual is carried into the next step), which keeps SGD-style
+convergence (Karimireddy et al. 2019) while cutting pod-axis gradient bytes
+4x vs bf16 (8x vs fp32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_len(n: int, block: int) -> int:
+    return (-n) % block
+
+
+def quantize_int8(x: jax.Array, block: int = BLOCK):
+    """x: any shape -> (q int8 (nb, block), scales fp32 (nb,), orig shape)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = _pad_len(flat.shape[0], block)
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0], x.shape
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def psum_compressed(x: jax.Array, axis_name: str, error: jax.Array | None = None):
+    """Mean-all-reduce ``x`` over ``axis_name`` with int8 wire format +
+    error feedback. Must run inside shard_map with ``axis_name`` manual.
+
+    Wire cost: all-gather of int8 payload + fp32 per-block scales
+    (~1.016 B/element) vs bf16 psum (2 B moved twice: reduce-scatter +
+    all-gather). Returns (reduced x, new error residual).
+    """
+    if error is not None:
+        x = x + error
+    q, scale, shape = quantize_int8(x)
+    local = dequantize_int8(q, scale, shape)
+    new_error = x - local
+    qs = jax.lax.all_gather(q, axis_name)  # (n, nb, BLOCK) int8 — the wire payload
+    ss = jax.lax.all_gather(scale, axis_name)  # (n, nb) fp32 — 1/256 overhead
+    n = qs.shape[0]
+    flat = jnp.sum(qs.astype(jnp.float32) * ss[..., None], axis=0).reshape(-1)
+    numel = 1
+    for s in shape:
+        numel *= s
+    total = flat[:numel].reshape(shape)
+    return total / n, new_error

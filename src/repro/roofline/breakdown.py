@@ -1,0 +1,121 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Per-instruction cost breakdown for a dry-run cell — the 'profiler' of the
+hypothesis->change->measure loop (no hardware, so the lowered HLO is the
+profile; see DESIGN.md §5).
+
+  PYTHONPATH=src python -m repro.roofline.breakdown --arch nemotron-4-340b \
+      --shape train_4k --pure-dp --top 15
+"""
+
+import argparse
+from collections import Counter
+
+from repro import configs
+from repro.config import RunConfig, ParallelConfig, SHAPES
+from repro.roofline import hlo_parse as hp
+
+
+def breakdown(text: str, top: int = 15):
+    comps = hp.parse_module(text)
+    bytes_by = Counter()
+    flops_by = Counter()
+    coll_by = Counter()
+
+    def walk(comp, mult, materializing):
+        for name in comp.order:
+            inst = comp.instrs[name]
+            op = inst.opcode
+            if op == "while":
+                body = hp._attr(inst.rest, "body")
+                cond = hp._attr(inst.rest, "condition")
+                trips = hp._trip_count(comps[cond]) if cond in comps else 1
+                if body in comps:
+                    walk(comps[body], mult * trips, True)
+                continue
+            key = (comp.name.split(".")[0][:28], op, inst.type_str[:36])
+            if op in ("fusion", "call", "custom-call", "map", "reduce",
+                      "reduce-window", "scatter", "sort", "select-and-scatter"):
+                called = hp._attr(inst.rest, "calls") or hp._attr(inst.rest, "to_apply")
+                if called and called in comps:
+                    sub = hp._comp_costs(comps[called], comps, {}, False)
+                    flops_by[key] += mult * sub.flops
+                if materializing and op != "call":
+                    bytes_by[key] += mult * hp._fusion_io_bytes(inst, comp, comps)
+                continue
+            coll = hp._coll_kind(op)
+            if coll:
+                if op.endswith("-done"):
+                    continue
+                payload = sum(hp.shape_bytes(comp.instrs[o].type_str)
+                              for o in inst.operands() if o in comp.instrs) \
+                    or hp.shape_bytes(inst.type_str)
+                coll_by[key] += mult * payload
+                continue
+            if op == "dot":
+                flops_by[key] += mult * hp._dot_flops(inst, comp, comps)
+                if materializing:
+                    bytes_by[key] += mult * hp._instr_io_bytes(inst, comp)
+                continue
+            if op == "dynamic-update-slice":
+                if materializing:
+                    ops_ = inst.operands()
+                    upd = (hp.shape_bytes(comp.instrs[ops_[1]].type_str)
+                           if len(ops_) > 1 and ops_[1] in comp.instrs else 0)
+                    bytes_by[key] += mult * 2 * upd
+                continue
+            if op == "dynamic-slice":
+                if materializing:
+                    bytes_by[key] += mult * 2 * hp.shape_bytes(inst.type_str)
+                continue
+            if materializing and op not in hp._FREE_OPS:
+                bytes_by[key] += mult * hp._instr_io_bytes(inst, comp)
+
+    entry = next(c for c in comps.values() if c.is_entry)
+    walk(entry, 1, True)
+    return bytes_by, flops_by, coll_by
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--pure-dp", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--score-dtype", default="float32")
+    ap.add_argument("--moe-combine-dtype", default="float32")
+    ap.add_argument("--moe-zero-stage", type=int, default=3)
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    from repro.core.engine import ZeroInfinityEngine
+    from repro.launch.mesh import make_production_mesh
+    import dataclasses
+
+    cfg = configs.get(args.arch)
+    cfg = dataclasses.replace(cfg, score_dtype=args.score_dtype,
+                              moe_combine_dtype=args.moe_combine_dtype)
+    pc = ParallelConfig(pure_dp=args.pure_dp, remat=args.remat,
+                        moe_zero_stage=args.moe_zero_stage)
+    mesh = make_production_mesh(multi_pod=(args.mesh == "pod2"))
+    eng = ZeroInfinityEngine(RunConfig(model=cfg, parallel=pc), mesh)
+    compiled = eng.lower(SHAPES[args.shape]).compile()
+    b, f, c = breakdown(compiled.as_text(), args.top)
+    print("== top HBM byte charges (per chip) ==")
+    for k, v in b.most_common(args.top):
+        print(f"  {v:.3e}  {k}")
+    print(f"  TOTAL {sum(b.values()):.3e}  (t_mem={sum(b.values())/819e9:.2f}s)")
+    print("== top FLOP charges ==")
+    for k, v in f.most_common(5):
+        print(f"  {v:.3e}  {k}")
+    print("== top collective charges ==")
+    for k, v in c.most_common(8):
+        print(f"  {v:.3e}  {k}")
+    print(f"  TOTAL {sum(c.values()):.3e}  (t_coll={sum(c.values())/50e9:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

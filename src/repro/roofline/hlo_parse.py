@@ -1,0 +1,341 @@
+"""HLO-text cost parser with while-loop trip-count accounting.
+
+``compiled.cost_analysis()`` on this XLA build (a) reports per-partition
+numbers and (b) counts while (lax.scan) bodies ONCE. Since every model here
+scans its layers, that undercounts FLOPs by ~n_layers. This parser walks
+``compiled.as_text()`` directly:
+
+  * FLOPs: every ``dot`` (2 * prod(output) * prod(contracting dims)),
+    recursively through fusions/calls, multiplied by while trip counts
+    (recovered from the loop-condition's comparison constant).
+  * HBM bytes: operand+result bytes of *materializing* top-level ops
+    (fusions, dots, copies, collectives...) in entry/while/conditional
+    computations — fusion internals live in registers/VMEM and don't count.
+  * Collective bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute / ragged-all-to-all
+    (async -start/-done pairs counted once).
+
+All numbers are PER PARTITION (the module is already SPMD-partitioned).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^)=]*?\)?\{?[^=]*?)\s*([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "bitcast-convert",
+}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attrs (raw)
+
+    def operands(self) -> List[str]:
+        depth = 0
+        out, cur = [], []
+        for ch in self.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    break
+                depth -= 1
+            if ch == "," and depth == 0:
+                out.append("".join(cur).strip())
+                cur = []
+            else:
+                cur.append(ch)
+        if cur:
+            out.append("".join(cur).strip())
+        return [o.lstrip("%") for o in out if o.strip()]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr]
+    order: List[str]
+    is_entry: bool = False
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    text = _COMMENT_RE.sub("", text)  # /*index=5*/ comments break type parsing
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(1), {}, [],
+                                  is_entry=line.startswith("ENTRY"))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, opcode, rest = m.groups()
+            inst = Instr(name, type_str.strip(), opcode, rest)
+            cur.instrs[name] = inst
+            cur.order.append(name)
+    return comps
+
+
+def _attr(rest: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond: Computation) -> int:
+    """jax scans lower to `lt(counter, constant(N))` conditions."""
+    consts = []
+    for i in cond.instrs.values():
+        if i.opcode == "constant":
+            m = re.match(r"([\-\d]+)", i.rest)
+            if m:
+                try:
+                    consts.append(int(m.group(1)))
+                except ValueError:
+                    pass
+    return max(consts) if consts else 1
+
+
+def _dot_flops(inst: Instr, comp: Computation, comps) -> float:
+    out_elems = 1
+    for d in shape_dims(inst.type_str):
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.rest)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    ops = inst.operands()
+    lhs_shape: Tuple[int, ...] = ()
+    if ops:
+        lhs = comp.instrs.get(ops[0])
+        if lhs is not None:
+            lhs_shape = shape_dims(lhs.type_str)
+    contract = 1
+    for c in cdims:
+        if c < len(lhs_shape):
+            contract *= lhs_shape[c]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+
+    def __add__(self, o: "Costs") -> "Costs":
+        kinds = dict(self.coll_by_kind)
+        for k, v in o.coll_by_kind.items():
+            kinds[k] = kinds.get(k, 0.0) + v
+        return Costs(self.flops + o.flops, self.hbm_bytes + o.hbm_bytes,
+                     self.coll_bytes + o.coll_bytes, kinds)
+
+    def scaled(self, f: float) -> "Costs":
+        return Costs(self.flops * f, self.hbm_bytes * f, self.coll_bytes * f,
+                     {k: v * f for k, v in self.coll_by_kind.items()})
+
+
+def _comp_costs(comp: Computation, comps: Dict[str, Computation],
+                memo: Dict[Tuple[str, bool], Costs], materializing: bool) -> Costs:
+    key = (comp.name, materializing)
+    if key in memo:
+        return memo[key]
+    memo[key] = Costs()  # cycle guard
+    total = Costs()
+    for name in comp.order:
+        inst = comp.instrs[name]
+        op = inst.opcode
+        # ---- control flow ----
+        if op == "while":
+            body = _attr(inst.rest, "body")
+            cond = _attr(inst.rest, "condition")
+            trips = _trip_count(comps[cond]) if cond in comps else 1
+            if body in comps:
+                total = total + _comp_costs(comps[body], comps, memo, True).scaled(trips)
+            continue
+        if op == "conditional":
+            for branch in re.findall(r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w.\-]+)|false_computation=%?([\w.\-]+))", inst.rest):
+                for b in branch:
+                    for bname in filter(None, re.split(r"[,\s%]+", b or "")):
+                        if bname in comps:
+                            total = total + _comp_costs(comps[bname], comps, memo, True)
+            continue
+        if op in ("fusion", "call", "custom-call", "map", "reduce", "reduce-window", "scatter", "sort", "select-and-scatter"):
+            called = _attr(inst.rest, "calls") or _attr(inst.rest, "to_apply")
+            if called and called in comps:
+                # fusion internals: flops recurse; bytes do NOT (registers)
+                sub = _comp_costs(comps[called], comps, memo, False)
+                total = total + Costs(sub.flops, 0.0, sub.coll_bytes, sub.coll_by_kind)
+            if materializing and op != "call":
+                total = total + Costs(0.0, _fusion_io_bytes(inst, comp, comps), 0.0)
+            continue
+        # ---- collectives ----
+        coll = _coll_kind(op)
+        if coll:
+            if op.endswith("-done"):
+                continue  # counted at -start
+            payload = sum(
+                shape_bytes(comp.instrs[o].type_str)
+                for o in inst.operands() if o in comp.instrs
+            ) or shape_bytes(inst.type_str)
+            total = total + Costs(0.0, _instr_io_bytes(inst, comp) if materializing else 0.0,
+                                  payload, {coll: payload})
+            continue
+        # ---- compute ----
+        if op == "dot":
+            total = total + Costs(_dot_flops(inst, comp, comps),
+                                  _instr_io_bytes(inst, comp) if materializing else 0.0)
+            continue
+        if op == "convolution":
+            out_e = 1
+            for d in shape_dims(inst.type_str):
+                out_e *= d
+            ops_ = inst.operands()
+            k_elems = 1
+            if len(ops_) > 1 and ops_[1] in comp.instrs:
+                for d in shape_dims(comp.instrs[ops_[1]].type_str):
+                    k_elems *= d
+            o_last = shape_dims(inst.type_str)[-1] if shape_dims(inst.type_str) else 1
+            total = total + Costs(2.0 * out_e * max(k_elems // max(o_last, 1), 1),
+                                  _instr_io_bytes(inst, comp) if materializing else 0.0)
+            continue
+        if op == "dynamic-update-slice":
+            # in-place on the carried buffer: traffic = read+write the slice
+            if materializing:
+                ops_ = inst.operands()
+                upd = (shape_bytes(comp.instrs[ops_[1]].type_str)
+                       if len(ops_) > 1 and ops_[1] in comp.instrs else 0)
+                total = total + Costs(0.0, 2.0 * upd)
+            continue
+        if op == "dynamic-slice":
+            if materializing:
+                total = total + Costs(0.0, 2.0 * shape_bytes(inst.type_str))
+            continue
+        if materializing and op not in _FREE_OPS:
+            total = total + Costs(0.0, _instr_io_bytes(inst, comp))
+    memo[key] = total
+    return total
+
+
+def _coll_kind(opcode: str) -> Optional[str]:
+    for c in COLLECTIVES:
+        if opcode == c or opcode == c + "-start" or opcode == c + "-done":
+            return c
+    return None
+
+
+def _instr_io_bytes(inst: Instr, comp: Computation) -> float:
+    out = shape_bytes(inst.type_str)
+    ins = sum(shape_bytes(comp.instrs[o].type_str)
+              for o in inst.operands() if o in comp.instrs)
+    return float(out + ins)
+
+
+def _fusion_io_bytes(inst: Instr, comp: Computation, comps) -> float:
+    """Fusion HBM traffic with in-place dynamic-update-slice awareness.
+
+    A kLoop fusion whose root is a DUS (the lax.scan output-stacking pattern)
+    updates its big carried buffer in place: real traffic is the slice, not
+    the buffer. We exclude the aliased buffer params and charge 2x the
+    update slice instead of the full output.
+    """
+    called_name = _attr(inst.rest, "calls")
+    called = comps.get(called_name) if called_name else None
+    if called is None or not called.order:
+        return _instr_io_bytes(inst, comp)
+    root = called.instrs[called.order[-1]]
+    dus_roots: List[Instr] = []
+    if root.opcode == "dynamic-update-slice":
+        dus_roots = [root]
+    elif root.opcode == "tuple":
+        dus_roots = [called.instrs[o] for o in root.operands()
+                     if o in called.instrs
+                     and called.instrs[o].opcode == "dynamic-update-slice"]
+    if not dus_roots:
+        return _instr_io_bytes(inst, comp)
+
+    # params of the fusion computation, in order, map to fusion operands
+    param_order: List[str] = [n for n in called.order
+                              if called.instrs[n].opcode == "parameter"]
+    aliased_params = set()
+    slice_traffic = 0.0
+    for dus in dus_roots:
+        ops_ = dus.operands()
+        if ops_ and ops_[0] in called.instrs:
+            buf = called.instrs[ops_[0]]
+            if buf.opcode == "parameter":
+                aliased_params.add(buf.name)
+        if len(ops_) > 1 and ops_[1] in called.instrs:
+            slice_traffic += 2.0 * shape_bytes(called.instrs[ops_[1]].type_str)
+        else:
+            slice_traffic += 2.0 * shape_bytes(dus.type_str)
+
+    fusion_ops = inst.operands()
+    other_in = 0.0
+    for idx, pname in enumerate(param_order):
+        if pname in aliased_params:
+            continue
+        if idx < len(fusion_ops) and fusion_ops[idx] in comp.instrs:
+            other_in += shape_bytes(comp.instrs[fusion_ops[idx]].type_str)
+    return slice_traffic + other_in
+
+
+def module_costs(text: str) -> Costs:
+    comps = parse_module(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return Costs()
+    memo: Dict[Tuple[str, bool], Costs] = {}
+    return _comp_costs(entry, comps, memo, True)

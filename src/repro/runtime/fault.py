@@ -1,0 +1,106 @@
+"""Fault tolerance & straggler mitigation for the training loop.
+
+At thousand-node scale the failure model is: a host dies (step raises /
+hangs), a chip throws an XLA error, or a host straggles (slow NVMe, thermal
+throttle, network). Policies implemented here and exercised by
+tests/test_fault_tolerance.py:
+
+  * ``FailureInjector``  — deterministic fault injection (env/step-driven)
+    so restart paths are *tested*, not assumed.
+  * ``retry_loop``       — supervision: on failure, restore latest
+    checkpoint and resume; bounded restarts; exponential backoff.
+  * ``StragglerMonitor`` — per-step wall-time EMA + MAD outlier detection.
+    Single-process action = log & count; the multi-host action (re-shard
+    data away from the slow host / preempt to spares) plugs into
+    ``on_straggler``.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, List, Optional
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class FailureInjector:
+    """Raise at a target step, once. Configure via ctor or env:
+    REPRO_FAIL_AT_STEP=N (and optional REPRO_FAIL_MARKER=<path> so the
+    failure fires only in the first process incarnation)."""
+
+    def __init__(self, fail_at_step: Optional[int] = None, marker: Optional[str] = None):
+        env = os.environ.get("REPRO_FAIL_AT_STEP")
+        self.fail_at = fail_at_step if fail_at_step is not None else (
+            int(env) if env else None)
+        self.marker = marker or os.environ.get("REPRO_FAIL_MARKER")
+
+    def maybe_fail(self, step: int) -> None:
+        if self.fail_at is None or step != self.fail_at:
+            return
+        if self.marker:
+            if os.path.exists(self.marker):
+                return  # already failed once in a previous incarnation
+            with open(self.marker, "w") as f:
+                f.write(str(step))
+        raise SimulatedFailure(f"injected failure at step {step}")
+
+
+class StragglerMonitor:
+    def __init__(self, factor: float = 3.0, warmup: int = 5):
+        self.factor = factor
+        self.warmup = warmup
+        self.times: List[float] = []
+        self.flagged: List[int] = []
+        self._t0: Optional[float] = None
+        self.on_straggler: Optional[Callable[[int, float, float], None]] = None
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> float:
+        dt = time.perf_counter() - self._t0
+        baseline = self.median()
+        if len(self.times) >= self.warmup and baseline and dt > self.factor * baseline:
+            self.flagged.append(step)
+            if self.on_straggler:
+                self.on_straggler(step, dt, baseline)
+        self.times.append(dt)
+        return dt
+
+    def median(self) -> Optional[float]:
+        if not self.times:
+            return None
+        s = sorted(self.times)
+        return s[len(s) // 2]
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Offline-feed variant (unit tests / simulated timings)."""
+        baseline = self.median()
+        flag = bool(len(self.times) >= self.warmup and baseline
+                    and dt > self.factor * baseline)
+        if flag:
+            self.flagged.append(step)
+            if self.on_straggler:
+                self.on_straggler(step, dt, baseline)
+        self.times.append(dt)
+        return flag
+
+
+def retry_loop(run_once: Callable[[], None], *, max_restarts: int = 3,
+               backoff_s: float = 0.1,
+               on_restart: Optional[Callable[[int, BaseException], None]] = None) -> int:
+    """Supervise ``run_once``; restart on failure. Returns restart count."""
+    restarts = 0
+    while True:
+        try:
+            run_once()
+            return restarts
+        except SimulatedFailure as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            if on_restart:
+                on_restart(restarts, e)
+            time.sleep(backoff_s * (2 ** (restarts - 1)))

@@ -1,0 +1,27 @@
+"""Step metrics: tokens/s, step-time EMA, analytic MFU estimate."""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+
+class MetricsLogger:
+    def __init__(self, model_flops_per_token: float = 0.0, peak_flops: float = 197e12,
+                 n_chips: int = 1, log_fn=print):
+        self.fpt = model_flops_per_token
+        self.peak = peak_flops * n_chips
+        self.log_fn = log_fn
+        self.ema: Optional[float] = None
+        self.history = []
+
+    def log(self, step: int, loss: float, tokens: int, dt: float, **kw) -> dict:
+        self.ema = dt if self.ema is None else 0.9 * self.ema + 0.1 * dt
+        tps = tokens / dt if dt > 0 else 0.0
+        mfu = 6.0 * self.fpt * tps / self.peak if self.fpt else 0.0
+        rec = {"step": step, "loss": float(loss), "tokens_per_s": tps,
+               "step_time": dt, "step_time_ema": self.ema, "mfu_est": mfu, **kw}
+        self.history.append(rec)
+        self.log_fn(
+            f"step {step:5d} | loss {loss:8.4f} | {tps:9.0f} tok/s | "
+            f"{dt*1e3:7.1f} ms" + (f" | {k}" if (k := kw.get('note')) else ""))
+        return rec

@@ -1,0 +1,175 @@
+"""Core substrate tests: partitioning rules, tiling equivalence, optimizer,
+gradient compression — with hypothesis property tests on the invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.config import ParallelConfig, TrainConfig
+from repro.core import partition as pt
+from repro.core.tiling import tiled_matmul_xla, gathered_working_bytes
+from repro.optim import adam, compression
+
+
+# ---------------------------------------------------------------------------
+# partition rules
+# ---------------------------------------------------------------------------
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_rules_zero_stages():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    cfg = configs.get("gemma-7b")
+    for stage, param_sharded, opt_sharded in [(0, False, False), (1, False, True),
+                                              (3, True, True)]:
+        pr = pt.make_rules(cfg, mesh, ParallelConfig(zero_stage=stage), for_state="param")
+        orr = pt.make_rules(cfg, mesh, ParallelConfig(zero_stage=stage), for_state="opt")
+        pspec = pr.spec(("embed", "mlp"), (3072, 24576))
+        ospec = orr.spec(("embed", "mlp"), (3072, 24576))
+        assert (pspec[0] is not None) == param_sharded, (stage, pspec)
+        assert (ospec[0] is not None) == opt_sharded, (stage, ospec)
+        # TP dim always sharded over model
+        assert pspec[1] == "model" if len(pspec) > 1 else True
+
+
+def test_rules_divisibility_guard():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    cfg = configs.get("smollm-135m")  # 9 heads: must NOT shard heads
+    r = pt.make_rules(cfg, mesh, ParallelConfig(), for_state="param")
+    spec = r.spec(("embed", "heads", "head_dim"), (576, 9, 64))
+    assert len(spec) < 2 or spec[1] is None
+    # embed IS divisible by 16 -> sharded
+    assert spec[0] is not None
+
+
+def test_rules_attn_strategy():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    assert pt.choose_attn_strategy(configs.get("gemma-7b"), mesh, ParallelConfig()) == "tp"
+    assert pt.choose_attn_strategy(configs.get("llava-next-34b"), mesh, ParallelConfig()) == "cp"
+    assert pt.choose_attn_strategy(configs.get("nemotron-4-340b"), mesh, ParallelConfig()) == "tp"
+
+
+def test_vocab_padding():
+    cfg = configs.get("granite-moe-1b-a400m")
+    assert cfg.vocab_size == 49155
+    assert cfg.padded_vocab() % 2048 == 0
+    assert cfg.padded_vocab() >= cfg.vocab_size
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 2000), m=st.sampled_from([2, 4, 8, 256]))
+def test_pad_to_multiple_property(n, m):
+    x = jnp.arange(n, dtype=jnp.float32)
+    y = pt.pad_to_multiple(x, m)
+    assert y.shape[0] % m == 0
+    np.testing.assert_array_equal(np.asarray(y[:n]), np.asarray(x))
+
+
+def test_flatten_unflatten_roundtrip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16), "d": jnp.zeros((), jnp.float32)}}
+    flat, meta = pt.flatten_layer(tree)
+    back = pt.unflatten_layer(flat, meta)
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(
+        np.asarray(x, np.float32), np.asarray(y, np.float32)), tree, back)
+
+
+# ---------------------------------------------------------------------------
+# memory-centric tiling
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("axis", ["n", "k"])
+@pytest.mark.parametrize("tiles", [1, 2, 4])
+def test_tiled_matmul_xla_equivalence(axis, tiles):
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 32), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 64), jnp.float32)
+    y = tiled_matmul_xla(x, w, tiles, axis=axis)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(tiles=st.sampled_from([1, 2, 4, 8]),
+       k=st.sampled_from([16, 32, 64]), n=st.sampled_from([16, 32, 64]))
+def test_tiling_property(tiles, k, n):
+    x = jnp.linspace(-1, 1, 4 * k).reshape(4, k)
+    w = jnp.linspace(-1, 1, k * n).reshape(k, n)
+    for axis in ("n", "k"):
+        y = tiled_matmul_xla(x, w, tiles, axis=axis)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-4, atol=1e-5)
+
+
+def test_tiling_reduces_working_set():
+    # paper Fig. 6b premise: gathered working bytes scale 1/tiles
+    assert gathered_working_bytes(18432, 73728, 16) == gathered_working_bytes(18432, 73728, 1) // 16
+
+
+# ---------------------------------------------------------------------------
+# optimizer + compression
+# ---------------------------------------------------------------------------
+
+def test_adam_matches_reference_loop():
+    tc = TrainConfig(lr=1e-2, warmup_steps=1, weight_decay=0.0)
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    state = adam.init_state(params)
+    g = {"w": jnp.full((8,), 0.5, jnp.float32)}
+    p1, s1 = adam.apply_updates(g, state, tc, params_prev=params)
+    # manual first step: m=0.05, v=0.0125*0.05... compute explicitly
+    m = 0.1 * 0.5
+    v = 0.05 * 0.25
+    upd = 1e-2 * ((m / 0.1) / (np.sqrt(v / 0.05) + 1e-8))
+    np.testing.assert_allclose(np.asarray(s1.master["w"]), 1.0 - upd, rtol=1e-5)
+    assert p1["w"].dtype == jnp.bfloat16
+
+
+def test_fused_adam_path_matches_jnp_path():
+    tc = TrainConfig(lr=3e-3, warmup_steps=1)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (100,), jnp.float32)}
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (100,), jnp.float32)}
+    s0 = adam.init_state(params)
+    p_a, s_a = adam.apply_updates(g, s0, tc, params_prev=params, use_fused=False)
+    p_b, s_b = adam.apply_updates(g, s0, tc, params_prev=params, use_fused=True)
+    np.testing.assert_allclose(np.asarray(s_a.master["w"]), np.asarray(s_b.master["w"]),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_quantize_roundtrip_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,), jnp.float32) * 3.0
+    q, s, shape = compression.quantize_int8(x)
+    back = compression.dequantize_int8(q, s, shape)
+    err = np.max(np.abs(np.asarray(back - x)))
+    block_max = np.max(np.abs(np.asarray(x)))
+    assert err <= block_max / 127.0 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 700), scale=st.floats(1e-3, 1e3))
+def test_quantize_property(n, scale):
+    x = (jnp.arange(n, dtype=jnp.float32) - n / 2) * scale / max(n, 1)
+    q, s, shape = compression.quantize_int8(x)
+    back = compression.dequantize_int8(q, s, shape)
+    per_block_max = np.max(np.abs(np.asarray(x))) if n else 0.0
+    assert np.max(np.abs(np.asarray(back - x))) <= per_block_max / 127 + 1e-9
+
+
+def test_psum_compressed_error_feedback():
+    """Under vmap-with-axis (2 'ranks'), compressed mean-reduce must equal the
+    true mean within quantization error, and error feedback must carry the
+    residual so the 2-step average converges."""
+    x = jnp.stack([jnp.linspace(-1, 1, 256), jnp.linspace(1, -1, 256) * 0.5])
+
+    def f(xi):
+        red, err = compression.psum_compressed(xi, "r")
+        return red, err
+
+    red, err = jax.vmap(f, axis_name="r")(x)
+    true_mean = jnp.mean(x, axis=0)
+    np.testing.assert_allclose(np.asarray(red[0]), np.asarray(true_mean), atol=2e-2)
+    # residuals are bounded by per-block quantization step
+    assert float(jnp.max(jnp.abs(err))) <= 1.0 / 127 + 1e-6

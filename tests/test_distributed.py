@@ -1,0 +1,36 @@
+"""Distribution tests (subprocess-isolated so the main pytest process keeps
+seeing 1 CPU device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SCRIPTS = os.path.join(os.path.dirname(__file__), "dist_scripts")
+
+
+def run_script(name, timeout=900, **env_extra):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"), **env_extra)
+    r = subprocess.run([sys.executable, os.path.join(SCRIPTS, name)], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout[-3000:]}\nSTDERR:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_distributed_equivalence():
+    out = run_script("equivalence.py")
+    assert "EQUIVALENCE OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell(tmp_path):
+    """The dry-run entry point itself (512 host devices) on the smallest cell."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "smollm-135m",
+         "--shape", "train_4k", "--mesh", "pod1", "--out", str(tmp_path), "--force"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "ok" in r.stdout and "0 errors" in r.stdout

@@ -1,0 +1,90 @@
+"""Engine behaviour on 1 device: convergence, grad-accum equivalence,
+spec/sharding plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import (ParallelConfig, RunConfig, ShapeConfig, TrainConfig)
+from repro.core.engine import ZeroInfinityEngine
+from repro.launch.mesh import make_local_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_local_mesh(1, 1)
+
+
+def test_train_loss_decreases(mesh):
+    cfg = configs.smoke("smollm-135m")
+    run = RunConfig(model=cfg, train=TrainConfig(lr=3e-3, warmup_steps=2))
+    eng = ZeroInfinityEngine(run, mesh)
+    state = eng.init_state(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0, cfg.vocab_size)}
+    with jax.set_mesh(mesh):
+        step = jax.jit(eng.make_train_step())
+        losses = []
+        for _ in range(12):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+    assert int(state["opt"].step) == 12
+
+
+def test_grad_accum_equivalence(mesh):
+    """accum=2 over a batch must equal accum=1 over the same batch."""
+    cfg = configs.smoke("llama3.2-3b")
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0, cfg.vocab_size)}
+    losses = {}
+    for accum in (1, 2):
+        run = RunConfig(model=cfg, parallel=ParallelConfig(grad_accum=accum),
+                        train=TrainConfig(lr=1e-3))
+        eng = ZeroInfinityEngine(run, mesh)
+        state = eng.init_state(jax.random.PRNGKey(7))
+        with jax.set_mesh(mesh):
+            step = jax.jit(eng.make_train_step())
+            state, m1 = step(state, batch)
+            state, m2 = step(state, batch)
+        losses[accum] = (float(m1["loss"]), float(m2["loss"]))
+    # step-2 loss reflects the step-1 update: must match across accum settings
+    assert losses[1][1] == pytest.approx(losses[2][1], abs=2e-3), losses
+
+
+def test_grads_only_mode(mesh):
+    cfg = configs.smoke("smollm-135m")
+    run = RunConfig(model=cfg)
+    eng = ZeroInfinityEngine(run, mesh)
+    state = eng.init_state(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32), "labels": jnp.ones((2, 16), jnp.int32)}
+    with jax.set_mesh(mesh):
+        grads, m = jax.jit(eng.make_train_step(grads_only=True))(state, batch)
+    assert jax.tree.structure(grads) == jax.tree.structure(state["params"])
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_state_specs_match_init(mesh):
+    cfg = configs.smoke("gemma-7b")
+    eng = ZeroInfinityEngine(RunConfig(model=cfg), mesh)
+    state = eng.init_state(jax.random.PRNGKey(0))
+    specs = eng.state_specs()
+    def chk(x, s):
+        assert tuple(x.shape) == tuple(s.shape), (x.shape, s.shape)
+        assert x.dtype == s.dtype
+    jax.tree.map(chk, state, specs)
+
+
+def test_remat_modes_same_loss(mesh):
+    cfg = configs.smoke("llama3.2-3b")
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32), "labels": jnp.ones((2, 16), jnp.int32)}
+    vals = []
+    for remat in ("full", "dots", "none"):
+        run = RunConfig(model=cfg, parallel=ParallelConfig(remat=remat))
+        eng = ZeroInfinityEngine(run, mesh)
+        state = eng.init_state(jax.random.PRNGKey(3))
+        with jax.set_mesh(mesh):
+            _, m = jax.jit(eng.make_train_step())(state, batch)
+        vals.append(float(m["loss"]))
+    assert max(vals) - min(vals) < 1e-3, vals

@@ -1,0 +1,99 @@
+"""Per-kernel allclose sweeps against the ref.py oracles (interpret=True on
+CPU), including hypothesis property tests over shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+ADAM_KW = dict(lr=jnp.float32(1e-3), beta1=0.9, beta2=0.95, eps=1e-8,
+               weight_decay=0.1, bc1=jnp.float32(0.1), bc2=jnp.float32(0.05))
+
+
+@pytest.mark.parametrize("n", [64, 128, 129, 4096, 100_001])
+def test_fused_adam_sizes(n):
+    ks = jax.random.split(jax.random.PRNGKey(n), 4)
+    p = jax.random.normal(ks[0], (n,), jnp.float32)
+    g = jax.random.normal(ks[1], (n,), jnp.float32)
+    m = jax.random.normal(ks[2], (n,), jnp.float32) * 0.1
+    v = jnp.abs(jax.random.normal(ks[3], (n,), jnp.float32)) * 0.01
+    p1, m1, v1 = ops.fused_adam(p, g, m, v, **ADAM_KW)
+    p2, m2, v2 = ref.adam_ref(p, g, m, v, **ADAM_KW)
+    np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(m1, m2, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(v1, v2, rtol=1e-4, atol=1e-6)
+
+
+def test_fused_adam_nd_shape():
+    p = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 7), jnp.float32)
+    g = jnp.ones_like(p)
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    p1, m1, v1 = ops.fused_adam(p, g, m, v, **ADAM_KW)
+    p2, m2, v2 = ref.adam_ref(p, g, m, v, **ADAM_KW)
+    assert p1.shape == p.shape
+    np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape,blocks", [
+    ((128, 256, 128), (64, 64, 128)),
+    ((64, 512, 384), (64, 128, 256)),
+    ((300, 200, 100), (64, 64, 64)),   # non-divisible
+    ((8, 128, 128), (8, 128, 128)),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tiled_matmul(shape, blocks, dtype):
+    M, K, N = shape
+    bm, bn, bk = blocks
+    x = (jax.random.normal(jax.random.PRNGKey(1), (M, K)) * 0.1).astype(dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(2), (K, N)) * 0.1).astype(dtype)
+    y1 = ops.tiled_matmul(x, w, bm=bm, bn=bn, bk=bk)
+    y2 = ref.matmul_ref(x, w)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y1, np.float32), np.asarray(y2, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,H,KV,Sq,Sk,D,causal", [
+    (2, 4, 2, 128, 128, 32, True),
+    (1, 8, 8, 64, 64, 64, True),
+    (2, 4, 1, 128, 128, 32, False),   # MQA
+    (1, 2, 2, 100, 132, 32, True),    # ragged seq lens
+    (1, 6, 2, 64, 256, 64, True),     # long KV (decode-ish)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, H, KV, Sq, Sk, D, causal, dtype):
+    q = (jax.random.normal(jax.random.PRNGKey(3), (B, H, Sq, D)) * 0.3).astype(dtype)
+    k = (jax.random.normal(jax.random.PRNGKey(4), (B, KV, Sk, D)) * 0.3).astype(dtype)
+    v = (jax.random.normal(jax.random.PRNGKey(5), (B, KV, Sk, D)) * 0.3).astype(dtype)
+    o1 = ops.flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    o2 = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32), np.asarray(o2, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 65), k=st.integers(1, 65), n=st.integers(1, 65))
+def test_tiled_matmul_property(m, k, n):
+    x = jnp.arange(m * k, dtype=jnp.float32).reshape(m, k) % 7 / 7.0
+    w = jnp.arange(k * n, dtype=jnp.float32).reshape(k, n) % 5 / 5.0
+    y1 = ops.tiled_matmul(x, w, bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(y1, x @ w, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(sq=st.integers(8, 70), sk=st.integers(8, 70),
+       h=st.sampled_from([1, 2, 4]), rep=st.sampled_from([1, 2]))
+def test_flash_attention_property(sq, sk, h, rep):
+    # causal alignment is only well-defined for sq <= sk (no fully-masked rows)
+    sq = min(sq, sk)
+    D = 16
+    q = jax.random.normal(jax.random.PRNGKey(sq), (1, h * rep, sq, D)) * 0.5
+    k = jax.random.normal(jax.random.PRNGKey(sk), (1, h, sk, D)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(sk + 1), (1, h, sk, D)) * 0.5
+    o1 = ops.flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    o2 = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(o1, o2, rtol=5e-4, atol=5e-5)

@@ -1,0 +1,102 @@
+"""Validate the paper's analytical model (Secs. 3-4) against the paper's own
+reported numbers (Fig. 2a table, Fig. 3 bandwidth statements, Fig. 6a scale
+ordering). This is the reproduction anchor for the memory/bandwidth claims."""
+import math
+
+import pytest
+
+from repro.core import model_math as mm
+
+
+# Paper Fig. 2a rows: (params_T, layers, hidden, attn_heads, model_states_TB,
+#                      act_ckpt_TB, MSWM_GB, AWM_GB)
+FIG2A = [
+    (0.10, 80, 10 * 1024, 128, 1.83, 0.05, 1.95, 1.63),
+    (0.50, 100, 20 * 1024, 160, 9.16, 0.12, 6.25, 2.50),
+    (1.01, 128, 25 * 1024, 256, 18.31, 0.20, 9.77, 3.56),
+    (10.05, 195, 64 * 1024, 512, 182.81, 0.76, 64.00, 8.00),
+    (101.47, 315, 160 * 1024, 1024, 1845.70, 3.08, 400.00, 18.00),
+]
+TB = 2 ** 40
+GB = 2 ** 30
+
+
+@pytest.mark.parametrize("row", FIG2A, ids=lambda r: f"{r[0]}T")
+def test_fig2a_param_count(row):
+    params_t, nl, hd, heads, *_ = row
+    assert mm.transformer_params(nl, hd) / 1e12 == pytest.approx(params_t, rel=0.01)
+
+
+@pytest.mark.parametrize("row", FIG2A, ids=lambda r: f"{r[0]}T")
+def test_fig2a_model_states(row):
+    params_t, nl, hd, heads, states_tb, *_ = row
+    assert mm.model_states_bytes(nl, hd) / TB == pytest.approx(states_tb, rel=0.01)
+
+
+@pytest.mark.parametrize("row", FIG2A, ids=lambda r: f"{r[0]}T")
+def test_fig2a_activation_checkpoints(row):
+    params_t, nl, hd, heads, _, ckpt_tb, *_ = row
+    # paper: bsz=32, seq=1024, one checkpoint per block
+    got = mm.activation_checkpoint_bytes(nl, hd, bsz=32, seq=1024, ci=1) / TB
+    assert got == pytest.approx(ckpt_tb, rel=0.05)
+
+
+@pytest.mark.parametrize("row", FIG2A, ids=lambda r: f"{r[0]}T")
+def test_fig2a_working_memory(row):
+    params_t, nl, hd, heads, _, _, mswm_gb, awm_gb = row
+    got_mswm = mm.model_state_working_memory_bytes(hd) / GB
+    if params_t == 0.10:
+        # Paper-table inconsistency: Fig. 2a row 1 lists 1.95 GB but Eq. 4
+        # (4*hd*4hd, hd=10240) gives 1.5625 GiB; the SAME equation matches
+        # the other four rows to 2 decimals. We reproduce Eq. 4.
+        assert got_mswm == pytest.approx(1.5625, rel=0.01)
+    else:
+        assert got_mswm == pytest.approx(mswm_gb, rel=0.01)
+    # AWM column is per-GPU at bsz=4 (32 per 16-GPU node -> 2-4/GPU; 4 matches)
+    got_awm = mm.activation_working_memory_bytes(hd, bsz=4, seq=1024, attn_heads=heads) / GB
+    assert got_awm == pytest.approx(awm_gb, rel=0.05)
+
+
+def test_ait_expressions():
+    # Eq. 9-11
+    assert mm.ait_params_grads(bsz=2, seq=1024) == 2048
+    assert mm.ait_optimizer_states(bsz=2, seq=1024) == 512
+    assert mm.ait_activation_checkpoints(hd=8192, ci=1) == 24 * 8192
+
+
+def test_fig3_bandwidth_statements():
+    """Paper Sec. 5.2: >=70 GB/s for params/grads -> >50% efficiency at bsz=1;
+    optimizer states need ~1.5 TB/s for 90% at bsz=2; activation checkpoints
+    sustain 50% at 2 GB/s for hd>=2K."""
+    peak = 70e12
+    eff = mm.efficiency(mm.ait_params_grads(1, 1024), 70e9, peak)
+    assert eff > 0.5
+    bw_opt = mm.required_bandwidth(mm.ait_optimizer_states(2, 1024), peak, 0.9)
+    assert 1.0e12 < bw_opt < 2.0e12  # "nearly 1.5 TB/s"
+    eff_act = mm.efficiency(mm.ait_activation_checkpoints(2048, 1), 2e9, peak)
+    assert eff_act > 0.5
+
+
+def test_efficiency_monotonic_and_bounded():
+    peak = 70e12
+    effs = [mm.efficiency(1024, bw, peak) for bw in (1e9, 1e10, 1e11, 1e12)]
+    assert all(0 < e < 1 for e in effs)
+    assert effs == sorted(effs)
+
+
+def test_fig6a_max_model_size_ordering():
+    """Paper Fig. 6a: DP < ZeRO-2 ~ ZeRO-Offload < ZeRO-3 < Inf-CPU < Inf-NVMe,
+    spanning ~1.4B -> ~1T on one DGX-2 (700x)."""
+    c = mm.DGX2_NODE
+    sizes = {name: mm.max_trainable_params(p, c) for name, p in mm.POLICIES.items()}
+    assert sizes["dp"] < sizes["zero2"] <= sizes["zero_offload"]
+    assert sizes["zero_offload"] < sizes["zero_inf_cpu"] < sizes["zero_inf_nvme"]
+    # headline: NVMe placement reaches ~1T params on one node
+    assert sizes["zero_inf_nvme"] > 0.9e12
+    # and the span vs plain DP is huge (paper: 700x)
+    assert sizes["zero_inf_nvme"] / sizes["dp"] > 100
+
+
+def test_computation_per_iter_eq8():
+    # Eq. 8: 96 * bsz * seq * nl * hd^2
+    assert mm.computation_per_iter(10, 512, bsz=4, seq=128) == 96 * 4 * 128 * 10 * 512 ** 2

@@ -1,0 +1,79 @@
+"""Infinity offload engine: NvmeStore async I/O, pinned buffer pool reuse,
+and the chunked NVMe Adam step vs the in-memory reference."""
+import numpy as np
+import pytest
+
+from repro.core.offload import (ChunkedAdamOffload, NvmeStore, PinnedBufferPool,
+                                _adam_update_numpy)
+
+
+def test_store_roundtrip(tmp_path):
+    store = NvmeStore(str(tmp_path), pool_mb=4)
+    arrs = {f"k{i}": np.random.default_rng(i).standard_normal((100 + i,)).astype(np.float32)
+            for i in range(5)}
+    futs = {k: store.write(k, a) for k, a in arrs.items()}
+    store.flush()
+    for k, a in arrs.items():
+        got = store.read(k).result()
+        np.testing.assert_array_equal(got, a)
+    stats = store.bandwidth_stats()
+    assert stats["bytes_written"] == sum(a.nbytes for a in arrs.values())
+    assert stats["read_gbps"] > 0
+
+
+def test_store_overwrite_is_atomic(tmp_path):
+    store = NvmeStore(str(tmp_path), pool_mb=4, overlap=False)
+    a = np.arange(10, dtype=np.float32)
+    store.write("x", a).result()
+    b = a * 2
+    store.write("x", b).result()
+    np.testing.assert_array_equal(store.read("x").result(), b)
+
+
+def test_buffer_pool_reuse():
+    pool = PinnedBufferPool(1 << 20)
+    b1 = pool.acquire(1000)
+    pool.release(b1)
+    b2 = pool.acquire(1000)
+    assert b1 is b2  # recycled, not reallocated (fragmentation control)
+    assert pool.peak_outstanding <= 1 << 20
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+def test_chunked_adam_matches_reference(tmp_path, overlap):
+    store = NvmeStore(str(tmp_path / f"ov{overlap}"), pool_mb=8, overlap=overlap)
+    off = ChunkedAdamOffload(store, chunk_elems=1000)  # force multi-chunk
+    rng = np.random.default_rng(0)
+    params = {"a": rng.standard_normal((2500,)).astype(np.float32),
+              "b": rng.standard_normal((37, 11)).astype(np.float32)}
+    off.init_from_params(params)
+
+    ref = {k: (p.astype(np.float32).copy(), np.zeros_like(p, np.float32).reshape(-1),
+               np.zeros_like(p, np.float32).reshape(-1)) for k, p in params.items()}
+    kw = dict(lr=1e-2, beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.01)
+    for step in range(1, 4):
+        grads = {k: rng.standard_normal(p.shape).astype(np.float32)
+                 for k, p in params.items()}
+        new = off.step(grads, **kw)
+        c1 = 1 - kw["beta1"] ** step
+        c2 = 1 - kw["beta2"] ** step
+        for k in params:
+            p, m, v = ref[k]
+            pf = p.reshape(-1)
+            _adam_update_numpy(pf, m, v, grads[k].reshape(-1).astype(np.float32),
+                               kw["lr"], kw["beta1"], kw["beta2"], kw["eps"],
+                               kw["weight_decay"], c1, c2)
+            np.testing.assert_allclose(new[k].reshape(-1), pf, rtol=1e-6, atol=1e-7,
+                                       err_msg=f"leaf {k} step {step}")
+
+
+def test_chunked_adam_state_persists_on_nvme(tmp_path):
+    """Optimizer states never live in process memory between steps —
+    they round-trip through the store (the paper's NVMe residency)."""
+    store = NvmeStore(str(tmp_path), pool_mb=4, overlap=False)
+    off = ChunkedAdamOffload(store, chunk_elems=128)
+    off.init_from_params({"w": np.ones(300, np.float32)})
+    assert len(store.keys()) == 3 * 3  # 3 chunks x (master, m, v)
+    before = store.bytes_read
+    off.step({"w": np.ones(300, np.float32)}, lr=1e-3)
+    assert store.bytes_read > before  # states were streamed back in

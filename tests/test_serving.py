@@ -1,0 +1,90 @@
+"""Prefill-vs-decode consistency: decoding token S given a prefill over S
+tokens must match prefilling S+1 tokens directly. Covers the KV cache path
+(dense), ring window (recurrentgemma), SSD state handoff (mamba2), MoE
+decode, and enc-dec cross-attention caching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import ShapeConfig
+from repro.models import registry
+
+
+def _pad_seq_caches(cache, extra: int, seq_axis_names=("k", "v")):
+    """Grow dense-style K/V caches by `extra` slots along the seq axis."""
+    def grow(path, leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else None
+        if key in seq_axis_names and hasattr(leaf, "ndim") and leaf.ndim == 5:
+            return jnp.pad(leaf, ((0, 0), (0, 0), (0, extra), (0, 0), (0, 0)))
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(grow, cache)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "gemma-7b",
+                                  "granite-moe-1b-a400m", "mamba2-370m",
+                                  "recurrentgemma-9b"])
+def test_prefill_decode_consistency(arch):
+    cfg = configs.smoke(arch)
+    b = registry.build(cfg)
+    params = b.init(jax.random.PRNGKey(0))
+    S = 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S + 1), 0, cfg.vocab_size)
+
+    lg_full, _ = jax.jit(b.prefill)(params, {"tokens": toks})
+    _, cache = jax.jit(b.prefill)(params, {"tokens": toks[:, :S]})
+    if cfg.family in ("dense", "moe", "vlm"):
+        cache = _pad_seq_caches(cache, 1)
+    lg_dec, cache2 = jax.jit(b.decode_step)(params, cache, {"tokens": toks[:, S:S + 1]})
+
+    a = np.asarray(lg_full, np.float32)
+    d = np.asarray(lg_dec, np.float32)
+    err = np.max(np.abs(a - d))
+    assert err < 0.25, f"{arch}: prefill/decode mismatch {err}"
+    # argmax agreement is the serving-level contract
+    assert np.array_equal(a[:, 0].argmax(-1), d[:, 0].argmax(-1)), arch
+    lenleaf = cache2["len"] if isinstance(cache2, dict) else None
+    assert int(lenleaf) == S + 1
+
+
+def test_encdec_decode_consistency():
+    cfg = configs.smoke("seamless-m4t-medium")
+    b = registry.build(cfg)
+    params = b.init(jax.random.PRNGKey(0))
+    Bz, Se, Sd = 2, 8, 9
+    frames = jax.random.normal(jax.random.PRNGKey(1), (Bz, Se, cfg.d_model),
+                               jnp.float32).astype(jnp.bfloat16) * 0.1
+    toks = jax.random.randint(jax.random.PRNGKey(2), (Bz, Sd), 0, cfg.vocab_size)
+
+    lg_full, _ = jax.jit(b.prefill)(params, {"frames": frames, "tokens": toks})
+    _, cache = jax.jit(b.prefill)(params, {"frames": frames, "tokens": toks[:, :-1]})
+    cache = {**cache, "k": jnp.pad(cache["k"], ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0))),
+             "v": jnp.pad(cache["v"], ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0)))}
+    lg_dec, _ = jax.jit(b.decode_step)(params, cache, {"tokens": toks[:, -1:]})
+    err = np.max(np.abs(np.asarray(lg_full, np.float32) - np.asarray(lg_dec, np.float32)))
+    assert err < 0.25, err
+
+
+def test_rglru_window_ring_wraps():
+    """Decode past the window: ring slots must overwrite oldest entries and
+    still agree with a fresh prefill of the same suffix history."""
+    cfg = configs.smoke("recurrentgemma-9b")  # window = 32
+    b = registry.build(cfg)
+    params = b.init(jax.random.PRNGKey(0))
+    S = cfg.window + 4  # force wraparound
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, S + 4), 0, cfg.vocab_size)
+
+    # path A: prefill S then decode 4 tokens
+    _, cache = jax.jit(b.prefill)(params, {"tokens": toks[:, :S]})
+    dec = jax.jit(b.decode_step)
+    lg = None
+    for i in range(4):
+        lg, cache = dec(params, cache, {"tokens": toks[:, S + i:S + i + 1]})
+    # path B: straight prefill over all S+4
+    lg_full, _ = jax.jit(b.prefill)(params, {"tokens": toks})
+    err = np.max(np.abs(np.asarray(lg, np.float32) - np.asarray(lg_full, np.float32)))
+    assert err < 0.3, f"ring wraparound mismatch: {err}"
+    assert np.array_equal(np.asarray(lg)[:, 0].argmax(-1),
+                          np.asarray(lg_full)[:, 0].argmax(-1))

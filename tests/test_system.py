@@ -1,0 +1,50 @@
+"""End-to-end behaviour tests: the training driver (device + NVMe-offload
+optimizer tiers) and the serving driver, run via their CLIs exactly as a
+user would."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_cli(args, timeout=900, **env_extra):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"), **env_extra)
+    r = subprocess.run([sys.executable, "-m"] + args, env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout[-3000:]}\nSTDERR:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_train_cli_device_tier(tmp_path):
+    out = run_cli(["repro.launch.train", "--arch", "smollm-135m", "--smoke",
+                   "--steps", "12", "--batch", "4", "--seq", "64", "--lr", "3e-3",
+                   "--ckpt-dir", str(tmp_path), "--ckpt-every", "6"])
+    first = float(out.split("first loss")[1].split("|")[0])
+    last = float(out.split("last loss")[1].split("|")[0])
+    assert last < first - 0.2, out.splitlines()[-1]
+    assert os.path.exists(os.path.join(str(tmp_path), "step-00000012"))
+
+
+@pytest.mark.slow
+def test_train_cli_nvme_tier(tmp_path):
+    """The paper's NVMe-resident optimizer: states stream through the store,
+    training still converges, bandwidth counters report."""
+    out = run_cli(["repro.launch.train", "--arch", "smollm-135m", "--smoke",
+                   "--steps", "10", "--batch", "4", "--seq", "64", "--lr", "3e-3",
+                   "--offload-opt", "nvme", "--nvme-dir", str(tmp_path / "nvme"),
+                   "--ckpt-dir", str(tmp_path / "ck"), "--ckpt-every", "0"])
+    first = float(out.split("first loss")[1].split("|")[0])
+    last = float(out.split("last loss")[1].split("|")[0])
+    assert last < first - 0.1
+    assert "nvme: read" in out
+
+
+@pytest.mark.slow
+def test_serve_cli(tmp_path):
+    out = run_cli(["repro.launch.serve", "--arch", "smollm-135m", "--smoke",
+                   "--batch", "2", "--prompt-len", "16", "--new-tokens", "8"])
+    assert "prefill:" in out and "decode:" in out and "slot 0:" in out
