@@ -238,7 +238,7 @@ def train_step_micro() -> None:
     import jax
     import jax.numpy as jnp
 
-    from repro import configs
+    from repro import compat, configs
     from repro.config import RunConfig, TrainConfig
     from repro.core.engine import ZeroInfinityEngine
     from repro.launch.mesh import make_local_mesh
@@ -249,7 +249,7 @@ def train_step_micro() -> None:
     state = eng.init_state(jax.random.PRNGKey(0))
     batch = {"tokens": jnp.ones((4, 128), jnp.int32),
              "labels": jnp.ones((4, 128), jnp.int32)}
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step = jax.jit(eng.make_train_step())
         state, m = step(state, batch)  # compile
         jax.block_until_ready(m["loss"])
@@ -260,6 +260,49 @@ def train_step_micro() -> None:
         us = (time.perf_counter() - t0) / 3 * 1e6
     toks = 4 * 128
     emit("micro/train_step_smoke", us, f"{toks / (us / 1e6):.0f}tok_s")
+
+
+# ---------------------------------------------------------------------------
+# Executor: any engine x any offload tier through InfinityExecutor
+# (--engine pjit|zero3 --offload device|host|nvme selects the cell)
+# ---------------------------------------------------------------------------
+
+def executor_micro(engine: str = "pjit", tier: str = "device") -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.config import RunConfig, TrainConfig, make_offload, make_parallel
+    from repro.core.executor import InfinityExecutor
+    from repro.launch.mesh import make_local_mesh
+
+    nvme_dir = tempfile.mkdtemp(prefix="repro_bench_exec")
+    try:
+        mesh = make_local_mesh(1, 1)
+        run = RunConfig(model=configs.smoke("smollm-135m"),
+                        parallel=make_parallel(engine),
+                        offload=make_offload(tier, nvme_dir=nvme_dir),
+                        train=TrainConfig())
+        ex = InfinityExecutor(run, mesh)
+        state = ex.init_state(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.ones((4, 128), jnp.int32),
+                 "labels": jnp.ones((4, 128), jnp.int32)}
+        step = ex.make_train_step()
+        state, m = step(state, batch)  # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(3):
+            state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        toks = 4 * 128
+        emit(f"executor/{engine}_{tier}/train_step", us,
+             f"{toks / (us / 1e6):.0f}tok_s")
+        for k, v in ex.bandwidth_stats().items():
+            emit(f"executor/{engine}_{tier}/nvme_{k}", 0.0,
+                 f"{v:.3f}" if isinstance(v, float) else v)
+    finally:
+        shutil.rmtree(nvme_dir, ignore_errors=True)
 
 
 # ---------------------------------------------------------------------------
@@ -344,6 +387,7 @@ BENCHES = {
     "fig6d": fig6d_overlap,
     "fig6e": fig6e_act_offload,
     "micro": train_step_micro,
+    "executor": executor_micro,
     "kernels": kernels_micro,
     "roofline": roofline_table,
 }
@@ -352,11 +396,19 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated bench keys")
+    ap.add_argument("--engine", default="pjit", choices=["pjit", "zero3"],
+                    help="engine for the `executor` bench")
+    ap.add_argument("--offload", default="device",
+                    choices=["device", "host", "nvme"],
+                    help="optimizer tier for the `executor` bench")
     args = ap.parse_args()
     keys = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for k in keys:
-        BENCHES[k]()
+        if k == "executor":
+            executor_micro(args.engine, args.offload)
+        else:
+            BENCHES[k]()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,7 @@
+"""ZeRO-Infinity reproduction: three-tier (HBM / host / NVMe) ZeRO training
+in JAX, with a GSPMD-native engine and a paper-faithful explicit-collective
+engine behind one executor interface (see ``repro.core.executor``).
+"""
+from repro import compat
+
+compat.install()

@@ -1,0 +1,201 @@
+"""jax API-drift shim: one import site for every symbol that moved between
+jax 0.4.x and current jax.
+
+The repo targets the modern public API (``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``, ``jax.tree.*``, ``jax.make_mesh(axis_types=...)``)
+but must run on the 0.4.x toolchain baked into this container, where those
+live under older names (``jax.experimental.shard_map.shard_map`` with
+``check_rep``, no ambient-mesh context, no axis types). Import the names
+from here inside ``src/repro``; ``install()`` additionally backfills the
+missing attributes onto the ``jax`` module itself so tests, examples, and
+notebooks written against the modern API run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import inspect
+from typing import Optional
+
+import jax
+
+JAX_VERSION = tuple(int(p) for p in jax.__version__.split(".")[:3])
+
+
+# ---------------------------------------------------------------------------
+# jax.tree (public since 0.4.26; alias tree_util for anything older)
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "tree") and hasattr(jax.tree, "map"):
+    tree = jax.tree
+else:  # pragma: no cover - ancient jax
+    import types
+
+    tree = types.SimpleNamespace(
+        map=jax.tree_util.tree_map,
+        leaves=jax.tree_util.tree_leaves,
+        flatten=jax.tree_util.tree_flatten,
+        unflatten=jax.tree_util.tree_unflatten,
+        structure=jax.tree_util.tree_structure,
+        reduce=jax.tree_util.tree_reduce,
+        all=jax.tree_util.tree_all,
+    )
+
+
+# ---------------------------------------------------------------------------
+# shard_map: jax.shard_map(check_vma=) <-> experimental.shard_map(check_rep=)
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_04x
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map_04x(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
+
+# ---------------------------------------------------------------------------
+# set_mesh: ambient-mesh context manager
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+elif hasattr(jax.sharding, "use_mesh"):  # pragma: no cover - 0.5.x window
+    set_mesh = jax.sharding.use_mesh
+else:
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        # 0.4.x: NamedShardings carry their mesh, jit needs no ambient mesh.
+        yield mesh
+
+
+# ---------------------------------------------------------------------------
+# AxisType + make_mesh(axis_types=...)
+# ---------------------------------------------------------------------------
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+
+    class AxisType:
+        """Placeholder for jax.sharding.AxisType on 0.4.x (all axes Auto)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_make_mesh_raw = jax.make_mesh
+_MAKE_MESH_HAS_AXIS_TYPES = "axis_types" in inspect.signature(
+    _make_mesh_raw).parameters
+
+
+@functools.wraps(_make_mesh_raw)
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    if axis_types is not None and _MAKE_MESH_HAS_AXIS_TYPES:
+        return _make_mesh_raw(axis_shapes, axis_names, devices=devices,
+                              axis_types=axis_types)
+    # 0.4.x make_mesh has no axis_types kwarg (all axes are Auto anyway)
+    return _make_mesh_raw(axis_shapes, axis_names, devices=devices)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on every jax version
+    (0.4.x returns a one-element list of per-device dicts)."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+# ---------------------------------------------------------------------------
+# memory kinds (three-tier placement probes)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def memory_kinds() -> frozenset:
+    """Memory kinds addressable by device 0 (e.g. {'device','pinned_host'})."""
+    try:
+        return frozenset(m.kind for m in jax.devices()[0].addressable_memories())
+    except Exception:
+        return frozenset()
+
+
+@functools.lru_cache(maxsize=1)
+def default_memory_kind() -> Optional[str]:
+    try:
+        return jax.devices()[0].default_memory().kind
+    except Exception:
+        return None
+
+
+@functools.lru_cache(maxsize=1)
+def host_memory_kind() -> Optional[str]:
+    """The *distinct* host tier this backend can address from jit.
+
+    'pinned_host' on GPU/TPU. None on CPU (whose default memory already IS
+    host memory — the host tier degrades to device placement, keeping the
+    tier-selection code path identical everywhere).
+    """
+    kinds = memory_kinds()
+    if "pinned_host" in kinds and default_memory_kind() != "pinned_host":
+        return "pinned_host"
+    return None
+
+
+@functools.lru_cache(maxsize=1)
+def host_offload_supported() -> bool:
+    """Whether jit can place arrays in the host tier on this backend."""
+    if host_memory_kind() is None:
+        return False
+    try:
+        import jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+        mesh = Mesh(jax.devices()[:1], ("probe",))
+        s = NamedSharding(mesh, P(), memory_kind=host_memory_kind())
+        x = jax.ShapeDtypeStruct((8,), jnp.float32, sharding=s)
+        jax.jit(lambda a: a * 2.0, in_shardings=s, out_shardings=s).lower(x).compile()
+        return True
+    except Exception:
+        return False
+
+
+# ---------------------------------------------------------------------------
+# install(): backfill the modern names onto jax for external callers
+# ---------------------------------------------------------------------------
+
+_installed = False
+
+
+def install() -> None:
+    """Backfill missing modern-API attributes onto the jax module.
+
+    Idempotent; called from ``repro.__init__`` so any ``import repro``
+    (tests, examples, benchmarks) sees the same API surface regardless of
+    the installed jax version. Existing attributes are never overwritten.
+    """
+    global _installed
+    if _installed:
+        return
+    _installed = True
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = set_mesh
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = AxisType
+    if not _MAKE_MESH_HAS_AXIS_TYPES and jax.make_mesh is _make_mesh_raw:
+        jax.make_mesh = make_mesh
+    if not hasattr(jax, "tree"):  # pragma: no cover - ancient jax
+        jax.tree = tree

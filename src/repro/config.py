@@ -120,6 +120,21 @@ class OffloadConfig:
         assert self.act_tier in ("device", "host")
 
 
+def make_parallel(engine: str = "pjit", **kw) -> ParallelConfig:
+    """Engine-aware ParallelConfig: the explicit zero3 engine is pure-dp
+    (paper headline: no model parallelism), the GSPMD engine composes
+    TP/CP/EP. Single entry point for launchers/benchmarks/tests."""
+    if engine == "zero3":
+        kw.setdefault("pure_dp", True)
+    return ParallelConfig(engine=engine, **kw)
+
+
+def make_offload(tier: str = "device", **kw) -> OffloadConfig:
+    """Single-knob tier selection (`device` | `host` | `nvme`), applied to
+    the optimizer states — identical meaning for both engines."""
+    return OffloadConfig(opt_tier=tier, **kw)
+
+
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
     lr: float = 3e-4

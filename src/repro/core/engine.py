@@ -19,13 +19,13 @@ Offload tiers:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.config import RunConfig, ShapeConfig
 from repro.core import partition as pt
 from repro.models import registry
@@ -61,7 +61,7 @@ class ZeroInfinityEngine:
 
     def _tier_kind(self, tier: str) -> Optional[str]:
         if tier == "host" and self.host_ok:
-            return "pinned_host"
+            return compat.host_memory_kind()
         return None  # device, nvme (nvme states never enter the graph)
 
     def param_shardings(self):
@@ -84,7 +84,16 @@ class ZeroInfinityEngine:
                                     self._tier_kind(self.run.offload.opt_tier))
 
     def state_specs(self):
+        if self.run.offload.opt_tier == "nvme":
+            return {"params": self.param_specs()}
         return {"params": self.param_specs(), "opt": self._opt_state_from(self.opt_specs())}
+
+    def state_shardings(self):
+        """Sharding tree matching ``init_state`` (EngineProtocol)."""
+        if self.run.offload.opt_tier == "nvme":
+            return {"params": self.param_shardings()}
+        return {"params": self.param_shardings(),
+                "opt": self._opt_state_from(self.opt_shardings())}
 
     @staticmethod
     def _opt_state_from(tree) -> adam.AdamState:
@@ -128,8 +137,12 @@ class ZeroInfinityEngine:
             params = pt.init_tree(rng, self.bundle.defs)
             return params
 
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             params = jax.jit(_init, out_shardings=shardings)(rng)
+            if self.run.offload.opt_tier == "nvme":
+                # master/m/v never enter device memory: they live in the
+                # NvmeStore (seeded by InfinityExecutor from these params)
+                return {"params": params}
             opt = jax.jit(adam.init_state,
                           out_shardings=self._opt_state_from(self.opt_shardings()))(params)
         return {"params": params, "opt": opt}
@@ -167,7 +180,7 @@ class ZeroInfinityEngine:
             return loss * inv, jax.tree.map(lambda g: g * inv, grads)
 
         def train_step(state, batch):
-            params, opt = state["params"], state["opt"]
+            params, opt = state["params"], state.get("opt")  # no opt on nvme tier
             if opt_host:  # stream optimizer states host -> HBM for the update
                 opt = jax.tree.map(
                     lambda x, s: jax.device_put(x, s.with_memory_kind("device")),
@@ -195,7 +208,7 @@ class ZeroInfinityEngine:
         state_specs = self.state_specs()
         batch = self.batch_specs(shape)
         kw = {"donate_argnums": (0,)} if donate and not grads_only else {}
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             return jax.jit(step, **kw).lower(state_specs, batch)
 
     # ------------------------------------------------------------------
@@ -203,13 +216,13 @@ class ZeroInfinityEngine:
     # ------------------------------------------------------------------
 
     def lower_prefill(self, shape: ShapeConfig):
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             return jax.jit(self.bundle.prefill).lower(self.param_specs(), self.batch_specs(shape))
 
     def lower_decode(self, shape: ShapeConfig):
         batch = self.batch_specs(shape)
         cache = self.cache_specs(shape)
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             return jax.jit(self.bundle.decode_step).lower(self.param_specs(), cache, batch)
 
     def lower(self, shape: ShapeConfig):
@@ -225,15 +238,6 @@ def _global_norm(tree) -> jax.Array:
     return jnp.sqrt(sum(leaves))
 
 
-@functools.lru_cache(maxsize=1)
 def host_memory_kind_supported() -> bool:
-    """Probe whether the backend supports pinned_host shardings in jit."""
-    try:
-        dev = jax.devices()[0]
-        mesh = Mesh([dev], ("probe",))
-        s = NamedSharding(mesh, P(), memory_kind="pinned_host")
-        x = jax.ShapeDtypeStruct((8,), jnp.float32, sharding=s)
-        jax.jit(lambda a: a * 2.0, in_shardings=s, out_shardings=s).lower(x).compile()
-        return True
-    except Exception:
-        return False
+    """Probe whether the backend supports host-tier shardings in jit."""
+    return compat.host_offload_supported()

@@ -1,0 +1,239 @@
+"""InfinityExecutor: one interface over both ZeRO engines x three tiers.
+
+The paper's claim (Secs. 5-6) is a *single* engine that simultaneously
+exploits GPU/TPU HBM, pinned host DRAM, and NVMe with an overlap-centric
+schedule. This module is that unification point for the repo's two engines:
+
+  * ``ZeroInfinityEngine`` (core/engine.py) — GSPMD-native; XLA places the
+    ZeRO collectives from shardings.
+  * ``ExplicitZero3Engine`` (core/zero.py) — paper-faithful explicit
+    collectives in shard_map.
+
+Both satisfy ``EngineProtocol`` (init_state / make_train_step /
+state_shardings / lower_train); ``make_engine`` selects one from
+``RunConfig.parallel.engine``. ``InfinityExecutor`` then drives the
+configured optimizer tier:
+
+  * device / host — one jitted step; the host tier streams optimizer states
+    through the backend's host memory kind in-graph.
+  * nvme — the jitted step computes reduce-scattered grads; the executor
+    streams master/m/v through ``NvmeStore`` with ``ChunkedAdamOffload``'s
+    read(k+1) || update(k) || write(k-1) pipeline. For the explicit engine
+    the store holds each rank's (L, P/dp) flat shard under its own key
+    namespace (``rank<r>/flat``) — the paper's per-worker NVMe partition —
+    and the measured NVMe bandwidth counters are surfaced in step metrics.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+from repro import compat
+from repro.config import RunConfig, ShapeConfig
+from repro.core.engine import ZeroInfinityEngine
+from repro.core.offload import ChunkedAdamOffload, NvmeStore
+from repro.core.zero import ExplicitZero3Engine
+from repro.optim import adam as adam_mod
+
+
+@runtime_checkable
+class EngineProtocol(Protocol):
+    """The contract both ZeRO engines implement."""
+
+    def init_state(self, rng: jax.Array): ...
+
+    def make_train_step(self, *, grads_only: bool = False): ...
+
+    def state_shardings(self): ...
+
+    def lower_train(self, shape: ShapeConfig, *, grads_only: bool = False): ...
+
+
+def make_engine(run: RunConfig, mesh) -> EngineProtocol:
+    """RunConfig.parallel.engine -> engine instance ('pjit' | 'zero3')."""
+    if run.parallel.engine == "zero3":
+        return ExplicitZero3Engine(run, mesh)
+    return ZeroInfinityEngine(run, mesh)
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def _unflatten_like(like, flat: Dict[str, np.ndarray]):
+    leaves, _ = jax.tree_util.tree_flatten_with_path(like)
+    vals = [jnp.asarray(flat[jax.tree_util.keystr(path)]).astype(leaf.dtype)
+            for path, leaf in leaves]
+    return jax.tree.unflatten(jax.tree.structure(like), vals)
+
+
+class InfinityExecutor:
+    """Drives an engine through the configured three-tier placement.
+
+    ``train_step(state, batch)`` is a host-level callable with one signature
+    for every (engine, tier) combination; per-step metrics always include
+    loss/grad_norm/lr and, on the NVMe tier, the store's measured
+    read/write bandwidth.
+    """
+
+    def __init__(self, run: RunConfig, mesh, *, engine: Optional[EngineProtocol] = None):
+        self.run = run
+        self.mesh = mesh
+        self.engine = engine if engine is not None else make_engine(run, mesh)
+        self.is_explicit = isinstance(self.engine, ExplicitZero3Engine)
+        if self.is_explicit and run.offload.param_tier != "device":
+            raise NotImplementedError(
+                "explicit engine: param_tier host/nvme not implemented — "
+                "bf16 params stay in HBM (the paper's fp16-param NVMe tier "
+                "maps to the GSPMD engine's memory_kind path)")
+        self.nvme = run.offload.opt_tier == "nvme"
+        self.store: Optional[NvmeStore] = None
+        self.offload: Optional[ChunkedAdamOffload] = None
+        self._rank_of = {d: r for r, d in enumerate(np.asarray(mesh.devices).flat)}
+        self._step_fn = None
+
+    # ------------------------------------------------------------------
+    # state
+    # ------------------------------------------------------------------
+
+    def init_state(self, rng: jax.Array):
+        state = self.engine.init_state(rng)
+        if self.nvme:
+            self.reseed(state)
+        return state
+
+    def reseed(self, state, step: int = 0) -> None:
+        """(Re)populate the NVMe store from ``state`` — called by
+        ``init_state`` and after a checkpoint restore (m/v restart at zero,
+        matching an optimizer-state-free checkpoint)."""
+        if not self.nvme:
+            return
+        off = self.run.offload
+        if self.store is None:
+            self.store = NvmeStore(off.nvme_dir, pool_mb=off.pinned_buffer_mb,
+                                   overlap=off.overlap)
+        self.offload = ChunkedAdamOffload(self.store)
+        if self.is_explicit:
+            # seed per-rank key namespaces with the f32 view of each rank's
+            # (L, P/dp) bf16 shard (exact: bf16 -> f32 is lossless). A
+            # checkpoint-restored flat may live on one device — re-shard
+            # first so the rank partition matches the mesh.
+            flat = jax.device_put(state["flat"],
+                                  self.engine.state_shardings()["flat"])
+            self.offload.init_from_params(self._rank_shards(flat))
+        else:
+            self.offload.init_from_params(
+                {k: np.asarray(v) for k, v in
+                 _flatten_with_paths(state["params"]).items()})
+        self.offload.step_count = step
+
+    def state_shardings(self):
+        return self.engine.state_shardings()
+
+    def input_specs(self, shape: ShapeConfig):
+        eng = self.engine
+        return (eng.bundle.input_specs(shape) if hasattr(eng, "bundle")
+                else eng.input_specs(shape))
+
+    def batch_shardings(self, shape: ShapeConfig):
+        return {k: self.engine.batch_sharding(v)
+                for k, v in self.input_specs(shape).items()}
+
+    def n_params_active(self) -> int:
+        eng = self.engine
+        return (eng.bundle.n_params_active() if hasattr(eng, "bundle")
+                else eng.n_params_active())
+
+    # ------------------------------------------------------------------
+    # the unified train step
+    # ------------------------------------------------------------------
+
+    def make_train_step(self):
+        if self._step_fn is not None:
+            return self._step_fn
+        with compat.set_mesh(self.mesh):
+            jit_step = jax.jit(self.engine.make_train_step(grads_only=self.nvme))
+
+        if not self.nvme:
+            step = jit_step  # device/host tiers are fully in-graph
+        elif self.is_explicit:
+            step = self._explicit_nvme_step(jit_step)
+        else:
+            step = self._gspmd_nvme_step(jit_step)
+        self._step_fn = step
+        return step
+
+    def train_step(self, state, batch):
+        return self.make_train_step()(state, batch)
+
+    def lower_train(self, shape: ShapeConfig):
+        return self.engine.lower_train(shape, grads_only=self.nvme)
+
+    # ------------------------------------------------------------------
+    # NVMe tier: host-side streamed Adam
+    # ------------------------------------------------------------------
+
+    def _explicit_nvme_step(self, jit_step):
+        tc = self.run.train
+
+        def step(state, batch):
+            new_state, g32, metrics = jit_step(state, batch)
+            new_master = self.offload.step(
+                self._rank_shards(g32), lr=float(metrics["lr"]),
+                beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
+                weight_decay=tc.weight_decay)
+            new_state = dict(new_state)
+            new_state["flat"] = self._assemble_flat(new_master, like=state["flat"])
+            return new_state, self._with_nvme_metrics(metrics)
+
+        return step
+
+    def _gspmd_nvme_step(self, jit_step):
+        tc = self.run.train
+
+        def step(state, batch):
+            grads, metrics = jit_step(state, batch)
+            gflat = {k: np.asarray(v).astype(np.float32)
+                     for k, v in _flatten_with_paths(grads).items()}
+            lr = float(adam_mod.lr_at(tc, jnp.int32(self.offload.step_count + 1)))
+            new_flat = self.offload.step(gflat, lr=lr, beta1=tc.beta1,
+                                         beta2=tc.beta2, eps=tc.eps,
+                                         weight_decay=tc.weight_decay)
+            new_state = dict(state)
+            new_state["params"] = _unflatten_like(state["params"], new_flat)
+            metrics = dict(metrics, lr=lr)
+            return new_state, self._with_nvme_metrics(metrics)
+
+        return step
+
+    def _rank_shards(self, arr) -> Dict[str, np.ndarray]:
+        """Global (L, P) array -> {'rank<r>/flat': f32 local (L, P/dp)}."""
+        out = {}
+        for s in arr.addressable_shards:
+            r = self._rank_of[s.device]
+            out[f"rank{r}/flat"] = np.asarray(s.data).astype(np.float32)
+        return out
+
+    def _assemble_flat(self, new_master: Dict[str, np.ndarray], *, like):
+        """Per-rank f32 masters -> global bf16 flat array sharded like ``like``."""
+        pieces = []
+        for s in like.addressable_shards:
+            r = self._rank_of[s.device]
+            piece = new_master[f"rank{r}/flat"].astype(ml_dtypes.bfloat16)
+            pieces.append(jax.device_put(piece, s.device))
+        return jax.make_array_from_single_device_arrays(
+            like.shape, like.sharding, pieces)
+
+    def _with_nvme_metrics(self, metrics) -> dict:
+        stats = self.store.bandwidth_stats()
+        out = dict(metrics)
+        out.update({f"nvme_{k}": v for k, v in stats.items()})
+        return out
+
+    def bandwidth_stats(self) -> dict:
+        return self.store.bandwidth_stats() if self.store is not None else {}

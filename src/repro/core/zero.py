@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.config import RunConfig, ShapeConfig
 from repro.core import partition as pt
 from repro.models import common as cm
@@ -59,6 +60,22 @@ class _FlatLayout:
 
 
 class ExplicitZero3Engine:
+    """Paper-faithful engine with full three-tier (Infinity) placement.
+
+    The optimizer tier is selected by ``run.offload.opt_tier``:
+
+      * ``device`` — master/m/v live in HBM as local (L, P/dp) shards; the
+        partitioned Adam update runs in-graph.
+      * ``host``   — same layout, placed with the backend's host memory kind
+        (``pinned_host``); the step streams them HBM<->host around the
+        compute. On backends without a distinct host tier (CPU) this
+        degrades to device placement, so the code path stays identical.
+      * ``nvme``   — master/m/v never enter the graph: the step computes the
+        reduce-scattered grad shards only, and the executor
+        (``core/executor.py``) streams the states through ``NvmeStore`` with
+        the read(k+1) || update(k) || write(k-1) pipeline.
+    """
+
     def __init__(self, run: RunConfig, mesh: Mesh):
         assert run.model.family in ("dense",), "explicit engine: dense family only"
         self.run = run
@@ -70,6 +87,10 @@ class ExplicitZero3Engine:
         self.rules = pt.AxisRules(table=())  # pure dp: no TP constraints
         self.block_fn = transformer.make_block_fn(run.model, self.rules, run.parallel)
         self.defs = transformer.param_defs(run.model)
+        self.opt_tier = run.offload.opt_tier
+        self.host_kind = (compat.host_memory_kind()
+                          if self.opt_tier == "host" and compat.host_offload_supported()
+                          else None)
         self._build_layout()
 
     # ------------------------------------------------------------------
@@ -115,14 +136,16 @@ class ExplicitZero3Engine:
         params = pt.init_tree(rng, self.defs)
         flat = self._flatten_blocks(params["blocks"], jnp.bfloat16)  # (L, P)
         other = {"embed": params["embed"], "ln_f": params["ln_f"]}
-        flat32 = flat.astype(jnp.float32)
         state = {
             "flat": flat,  # bf16 compute shards
-            "master": flat32, "m": jnp.zeros_like(flat32), "v": jnp.zeros_like(flat32),
             "other": other,
             "other_opt": adam_mod.init_state(other),
             "step": jnp.zeros((), jnp.int32),
         }
+        if self.opt_tier != "nvme":  # nvme: master/m/v live in the NvmeStore
+            flat32 = flat.astype(jnp.float32)
+            state.update(master=flat32, m=jnp.zeros_like(flat32),
+                         v=jnp.zeros_like(flat32))
         return jax.device_put(state, self.state_shardings())
 
     def _flat_spec(self) -> P:
@@ -150,18 +173,56 @@ class ExplicitZero3Engine:
             jax.tree.map(lambda _: sh(P()), other),
             jax.tree.map(lambda _: sh(P()), other),
             jax.tree.map(lambda _: sh(P()), other))
-        return {
+        out = {
             "flat": sh(flat_spec),
-            "master": sh(flat_spec), "m": sh(flat_spec), "v": sh(flat_spec),
             "other": other, "other_opt": other_opt,
             "step": sh(P()),
         }
+        if self.opt_tier != "nvme":
+            opt_sh = sh(flat_spec)
+            if self.host_kind:  # optimizer states resident in pinned host DRAM
+                opt_sh = opt_sh.with_memory_kind(self.host_kind)
+            out.update(master=opt_sh, m=opt_sh, v=opt_sh)
+        return out
+
+    # ------------------------------------------------------------------
+    # data interface (mirrors ZeroInfinityEngine for the launch drivers)
+    # ------------------------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    def batch_sharding(self, spec: jax.ShapeDtypeStruct):
+        axes = (self.axis,) + (None,) * (len(spec.shape) - 1)
+        return NamedSharding(self.mesh, P(*axes))
+
+    def n_params_active(self) -> int:
+        blocks = sum(self.layout.sizes) * self.n_layers
+        other_defs = {"embed": self.defs["embed"], "ln_f": self.defs["ln_f"]}
+        leaves = jax.tree.leaves(other_defs,
+                                 is_leaf=lambda x: isinstance(x, pt.ParamDef))
+        other = sum(int(jnp.prod(jnp.array(d.shape))) if d.shape else 1
+                    for d in leaves)
+        return blocks + other
 
     # ------------------------------------------------------------------
     # train step
     # ------------------------------------------------------------------
 
-    def make_train_step(self):
+    def make_train_step(self, *, grads_only: bool = None):
+        """Build the sharded step.
+
+        ``grads_only=None`` (default) resolves from the configured optimizer
+        tier: the NVMe tier computes grad shards in-graph and leaves the
+        Adam update to the host-side pipeline (see ``InfinityExecutor``);
+        device/host tiers run partitioned Adam in-graph. The grads-only step
+        still advances ``step`` and the small replicated 'other' params so
+        only the flat (L, P/dp) shards are deferred to the executor.
+        """
+        if grads_only is None:
+            grads_only = self.opt_tier == "nvme"
         run = self.run
         cfg = run.model
         tc = run.train
@@ -240,29 +301,40 @@ class ExplicitZero3Engine:
             # all_gather); g_other needs the explicit dp reduction:
             g_other = jax.tree.map(lambda g: jax.lax.psum(g, axis), g_other)
 
-            # --- partitioned Adam on local shards (shard-parallel) ---
             step = state["step"] + 1
             lr = adam_mod.lr_at(tc, step)
+            g32 = g_flat.astype(jnp.float32)
+            gnorm = jnp.sqrt(jax.lax.psum(jnp.sum(g32 ** 2), axis)
+                             + sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                                   for x in jax.tree.leaves(g_other)))
+            metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+            new_other, new_other_opt = adam_mod.apply_updates(
+                g_other, state["other_opt"], tc, params_prev=other)
+
+            if grads_only:
+                # NVMe tier: flat shards updated out-of-graph by the executor
+                new_state = {
+                    "flat": flat_local,
+                    "other": new_other, "other_opt": new_other_opt,
+                    "step": step,
+                }
+                return new_state, g32, metrics
+
+            # --- partitioned Adam on local shards (shard-parallel) ---
             b1, b2, eps, wd = tc.beta1, tc.beta2, tc.eps, tc.weight_decay
             c1 = 1.0 - b1 ** step.astype(jnp.float32)
             c2 = 1.0 - b2 ** step.astype(jnp.float32)
-            g32 = g_flat.astype(jnp.float32)
             m = b1 * state["m"] + (1 - b1) * g32
             v = b2 * state["v"] + (1 - b2) * g32 * g32
             master = state["master"] - lr * ((m / c1) / (jnp.sqrt(v / c2) + eps)
                                              + wd * state["master"])
-            new_other, new_other_opt = adam_mod.apply_updates(
-                g_other, state["other_opt"], tc, params_prev=other)
             new_state = {
                 "flat": master.astype(jnp.bfloat16),
                 "master": master, "m": m, "v": v,
                 "other": new_other, "other_opt": new_other_opt,
                 "step": step,
             }
-            gnorm = jnp.sqrt(jax.lax.psum(jnp.sum(g32.astype(jnp.float32) ** 2), axis)
-                             + sum(jnp.sum(x.astype(jnp.float32) ** 2)
-                                   for x in jax.tree.leaves(g_other)))
-            return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+            return new_state, metrics
 
         flat_spec = self._flat_spec()
         rep = P()
@@ -279,26 +351,50 @@ class ExplicitZero3Engine:
             jax.tree.map(lambda _: rep, other_specs),
         )
         state_specs = {
-            "flat": flat_spec, "master": flat_spec, "m": flat_spec, "v": flat_spec,
+            "flat": flat_spec,
             "other": other_specs, "other_opt": opt_specs, "step": rep,
         }
+        if not grads_only:
+            state_specs.update(master=flat_spec, m=flat_spec, v=flat_spec)
         batch_spec = {"tokens": P(self.axis, None), "labels": P(self.axis, None)}
         metric_spec = {"loss": rep, "grad_norm": rep, "lr": rep}
+        out_specs = ((state_specs, flat_spec, metric_spec) if grads_only
+                     else (state_specs, metric_spec))
 
-        step_fn = jax.shard_map(
+        step_fn = compat.shard_map(
             sharded_step, mesh=self.mesh,
             in_specs=(state_specs, batch_spec),
-            out_specs=(state_specs, metric_spec),
+            out_specs=out_specs,
             check_vma=False,
         )
-        return step_fn
+        if grads_only or not self.host_kind:
+            return step_fn
 
-    def lower_train(self, shape: ShapeConfig):
-        flat_spec = self._flat_spec()
+        # Host tier: optimizer states are resident in pinned host DRAM;
+        # stream them to HBM around the sharded update and back after — the
+        # in-graph device_puts lower to async copies XLA can overlap.
+        host_shardings = self.state_shardings()
+        dev_kind = compat.default_memory_kind()
+
+        def to_kind(state, kind):
+            out = dict(state)
+            for k in ("master", "m", "v"):
+                s = host_shardings[k].with_memory_kind(kind) if kind else host_shardings[k]
+                out[k] = jax.device_put(state[k], s)
+            return out
+
+        def host_tier_step(state, batch):
+            new_state, metrics = step_fn(to_kind(state, dev_kind), batch)
+            return to_kind(new_state, None), metrics
+
+        return host_tier_step
+
+    def state_structs(self):
+        """ShapeDtypeStruct tree matching ``init_state`` for the active tier."""
+        shardings = self.state_shardings()
         mesh = self.mesh
         sh = lambda spec: NamedSharding(mesh, spec)
         L, Pl = self.n_layers, self.layout.padded
-        f32 = jax.ShapeDtypeStruct((L, Pl), jnp.float32, sharding=sh(flat_spec))
         other_specs = pt.shape_struct_tree(
             {"embed": self.defs["embed"], "ln_f": self.defs["ln_f"]},
             pt.AxisRules(table=()), mesh)
@@ -309,16 +405,25 @@ class ExplicitZero3Engine:
             jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32, sharding=s.sharding), other_specs),
         )
         state = {
-            "flat": jax.ShapeDtypeStruct((L, Pl), jnp.bfloat16, sharding=sh(flat_spec)),
-            "master": f32, "m": f32, "v": f32,
+            "flat": jax.ShapeDtypeStruct((L, Pl), jnp.bfloat16, sharding=shardings["flat"]),
             "other": other_specs,
             "other_opt": opt_specs,
             "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=sh(P())),
         }
+        if self.opt_tier != "nvme":
+            state.update({k: jax.ShapeDtypeStruct((L, Pl), jnp.float32,
+                                                  sharding=shardings[k])
+                          for k in ("master", "m", "v")})
+        return state
+
+    def lower_train(self, shape: ShapeConfig, *, grads_only: bool = None):
+        mesh = self.mesh
+        sh = lambda spec: NamedSharding(mesh, spec)
+        state = self.state_structs()
         B, S = shape.global_batch, shape.seq_len
         batch = {
             "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=sh(P(self.axis, None))),
             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=sh(P(self.axis, None))),
         }
-        with jax.set_mesh(self.mesh):
-            return jax.jit(self.make_train_step()).lower(state, batch)
+        with compat.set_mesh(self.mesh):
+            return jax.jit(self.make_train_step(grads_only=grads_only)).lower(state, batch)

@@ -20,7 +20,7 @@ import traceback
 
 import jax
 
-from repro import configs
+from repro import compat, configs
 from repro.config import RunConfig, ParallelConfig, OffloadConfig, SHAPES
 from repro.core import model_math
 from repro.core.engine import ZeroInfinityEngine
@@ -106,13 +106,13 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
                                 mesh_name=mesh_name, n_chips=n_chips,
                                 model_flops_total=mf)
         print(compiled.memory_analysis())   # proves it fits
-        print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+        print(compat.cost_analysis(compiled))  # FLOPs/bytes for §Roofline
         rec.update(status="ok", lower_s=t_lower, compile_s=t_compile,
                    n_params=eng.bundle.n_params(),
                    n_params_active=eng.bundle.n_params_active(),
                    memory_analysis=str(compiled.memory_analysis()),
                    cost_analysis={k: float(v) for k, v in
-                                  (compiled.cost_analysis() or {}).items()
+                                  compat.cost_analysis(compiled).items()
                                   if isinstance(v, (int, float))},
                    roofline=roof.to_dict())
     except Exception as e:  # record the failure — these are bugs to fix

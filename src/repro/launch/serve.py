@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import compat, configs
 from repro.config import ParallelConfig, RunConfig, ShapeConfig
 from repro.core.engine import ZeroInfinityEngine
 from repro.launch.mesh import make_local_mesh
@@ -57,7 +57,7 @@ def main() -> None:
     prefill = jax.jit(eng.bundle.prefill)
     decode = jax.jit(eng.bundle.decode_step)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         t0 = time.perf_counter()
         logits, cache = prefill(params, batch)
         jax.block_until_ready(logits)

@@ -1,36 +1,33 @@
-"""End-to-end training driver: data pipeline -> engine -> checkpoints,
-with fault injection / restart, straggler monitoring, and the NVMe-tier
-optimizer path.
+"""End-to-end training driver: data pipeline -> InfinityExecutor ->
+checkpoints, with fault injection / restart, straggler monitoring, and the
+three-tier (device / host / NVMe) optimizer placement for BOTH engines.
 
 Examples (CPU, reduced configs):
   PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
       --steps 50 --batch 8 --seq 128
   PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
       --steps 30 --offload-opt nvme          # streamed NVMe optimizer
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+      --engine zero3 --offload-opt nvme      # explicit collectives + NVMe
   REPRO_FAIL_AT_STEP=7 REPRO_FAIL_MARKER=/tmp/m PYTHONPATH=src \
       python -m repro.launch.train ... --resume auto   # restart drill
 """
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro import configs
+from repro import compat, configs
 from repro.checkpoint.manager import CheckpointManager
-from repro.config import (OffloadConfig, ParallelConfig, RunConfig, ShapeConfig,
-                          TrainConfig)
-from repro.core.engine import ZeroInfinityEngine
-from repro.core.offload import ChunkedAdamOffload, NvmeStore
+from repro.config import (RunConfig, ShapeConfig, TrainConfig, make_offload,
+                          make_parallel)
+from repro.core.executor import InfinityExecutor
 from repro.data.pipeline import PrefetchLoader, SyntheticStream
 from repro.launch.mesh import make_local_mesh, maybe_init_distributed
-from repro.runtime.fault import FailureInjector, retry_loop
+from repro.runtime.fault import FailureInjector, StragglerMonitor, retry_loop
 from repro.runtime.metrics import MetricsLogger
-from repro.runtime.fault import StragglerMonitor
 
 
 def build_argparser() -> argparse.ArgumentParser:
@@ -43,6 +40,8 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
+    ap.add_argument("--engine", default="pjit", choices=["pjit", "zero3"],
+                    help="pjit = GSPMD-native; zero3 = explicit collectives")
     ap.add_argument("--zero-stage", type=int, default=3)
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--offload-opt", default="device", choices=["device", "host", "nvme"])
@@ -60,9 +59,10 @@ def make_run(args) -> RunConfig:
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     return RunConfig(
         model=cfg,
-        parallel=ParallelConfig(zero_stage=args.zero_stage, grad_accum=args.grad_accum),
-        offload=OffloadConfig(opt_tier=args.offload_opt, nvme_dir=args.nvme_dir,
-                              overlap=not args.no_overlap),
+        parallel=make_parallel(args.engine, zero_stage=args.zero_stage,
+                               grad_accum=args.grad_accum),
+        offload=make_offload(args.offload_opt, nvme_dir=args.nvme_dir,
+                             overlap=not args.no_overlap),
         train=TrainConfig(lr=args.lr, steps=args.steps, checkpoint_dir=args.ckpt_dir,
                           checkpoint_every=args.ckpt_every, seed=args.seed),
     )
@@ -72,9 +72,8 @@ def train(args) -> dict:
     maybe_init_distributed()
     run = make_run(args)
     mesh = make_local_mesh(args.data_mesh, args.model_mesh)
-    eng = ZeroInfinityEngine(run, mesh)
+    executor = InfinityExecutor(run, mesh)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
-    nvme = run.offload.opt_tier == "nvme"
 
     ckpt = CheckpointManager(run.train.checkpoint_dir, keep=run.train.keep_checkpoints)
     injector = FailureInjector()
@@ -82,49 +81,31 @@ def train(args) -> dict:
     history = {"losses": [], "restarts": 0}
 
     def run_once():
-        state = eng.init_state(jax.random.PRNGKey(run.train.seed))
+        state = executor.init_state(jax.random.PRNGKey(run.train.seed))
         start_step = 0
         if args.resume == "auto" and ckpt.latest_step() is not None:
             state, extra = ckpt.restore(state, shardings=None)
-            state = jax.tree.map(jnp.asarray, state)
+            # elastic restore: checkpoints hold logical layouts — place them
+            # back onto this mesh's shardings (any dp degree)
+            state = jax.device_put(state, executor.state_shardings())
             start_step = extra["next_step"]
+            executor.reseed(state, step=start_step)
             print(f"resumed from checkpoint at step {start_step}")
 
-        offload_opt = None
-        if nvme:
-            store = NvmeStore(run.offload.nvme_dir,
-                              pool_mb=run.offload.pinned_buffer_mb,
-                              overlap=run.offload.overlap)
-            offload_opt = ChunkedAdamOffload(store)
-            flat = {k: np.asarray(v) for k, v in _flatten(state["params"]).items()}
-            offload_opt.init_from_params(flat)
-            offload_opt.step_count = start_step
-
-        step_fn = jax.jit(eng.make_train_step(grads_only=nvme))
-        specs = eng.bundle.input_specs(shape)
-        stream = SyntheticStream(specs, run.model.vocab_size, seed=run.train.seed)
-        shardings = {k: eng.batch_sharding(v) for k, v in specs.items()}
-        loader = PrefetchLoader(stream, start_step, run.train.steps, shardings)
-        logger = MetricsLogger(model_flops_per_token=eng.bundle.n_params_active(),
+        step_fn = executor.make_train_step()
+        stream = SyntheticStream(executor.input_specs(shape), run.model.vocab_size,
+                                 seed=run.train.seed)
+        loader = PrefetchLoader(stream, start_step, run.train.steps,
+                                executor.batch_shardings(shape))
+        logger = MetricsLogger(model_flops_per_token=executor.n_params_active(),
                                n_chips=len(mesh.devices.flat))
         tokens = shape.global_batch * shape.seq_len
 
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             for step, batch in loader:
                 straggler.start()
                 injector.maybe_fail(step)
-                if nvme:
-                    grads, metrics = step_fn(state, batch)
-                    gflat = {k: np.asarray(v, np.float32)
-                             for k, v in _flatten(grads).items()}
-                    new_flat = offload_opt.step(
-                        gflat, lr=float(adam_lr(run.train, step + 1)),
-                        beta1=run.train.beta1, beta2=run.train.beta2,
-                        eps=run.train.eps, weight_decay=run.train.weight_decay)
-                    state = {"params": _unflatten(state["params"], new_flat),
-                             "opt": state["opt"]}
-                else:
-                    state, metrics = step_fn(state, batch)
+                state, metrics = step_fn(state, batch)
                 loss = float(metrics["loss"])
                 dt = straggler.stop(step)
                 history["losses"].append(loss)
@@ -134,30 +115,15 @@ def train(args) -> dict:
                     ckpt.save(step + 1, state, {"next_step": step + 1})
         ckpt.wait()
         history["final_state"] = state
-        if nvme:
-            history["nvme_stats"] = offload_opt.store.bandwidth_stats()
+        stats = executor.bandwidth_stats()
+        if stats:
+            history["nvme_stats"] = stats
 
     history["restarts"] = retry_loop(
         run_once, on_restart=lambda n, e: print(f"restart #{n} after: {e}"))
     if straggler.flagged:
         print(f"straggler steps flagged: {straggler.flagged}")
     return history
-
-
-def adam_lr(tc: TrainConfig, step: int) -> float:
-    return tc.lr * min(step / max(tc.warmup_steps, 1), 1.0)
-
-
-def _flatten(tree) -> dict:
-    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
-
-
-def _unflatten(like, flat: dict):
-    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
-    vals = [jnp.asarray(flat[jax.tree_util.keystr(path)]).astype(leaf.dtype)
-            for path, leaf in leaves]
-    return jax.tree.unflatten(jax.tree.structure(like), vals)
 
 
 def main() -> None:
@@ -171,6 +137,7 @@ def main() -> None:
         s = hist["nvme_stats"]
         print(f"nvme: read {s['read_gbps']:.2f} GB/s, write {s['write_gbps']:.2f} GB/s, "
               f"pinned peak {s['pinned_peak_bytes']>>20} MiB")
+    return hist
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ import dataclasses
 import json
 from typing import Optional
 
+from repro import compat
 from repro.roofline import hlo_parse
 
 PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
@@ -86,12 +87,8 @@ class Roofline:
 def analyze(compiled, *, arch: str, shape: str, mesh_name: str, n_chips: int,
             model_flops_total: float) -> Roofline:
     costs = hlo_parse.module_costs(compiled.as_text())
-    ca = {}
     ma = None
-    try:
-        ca = compiled.cost_analysis() or {}
-    except Exception:
-        pass
+    ca = compat.cost_analysis(compiled)
     try:
         ma = compiled.memory_analysis()
     except Exception:

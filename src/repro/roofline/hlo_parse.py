@@ -31,8 +31,9 @@ _DTYPE_BYTES = {
 }
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_INSTR_RE = re.compile(
-    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^)=]*?\)?\{?[^=]*?)\s*([\w\-]+)\((.*)$")
+_NAME_EQ_RE = re.compile(r"%?([\w.\-]+)\s*=\s*")
+_BARE_TYPE_RE = re.compile(r"[\w\[\],]+")  # f32[8,128] — layout handled apart
+_OPCODE_RE = re.compile(r"([\w\-]+)\(")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
 
 COLLECTIVES = (
@@ -76,13 +77,15 @@ class Instr:
     rest: str  # operand list + attrs (raw)
 
     def operands(self) -> List[str]:
+        # split on top-level commas only: commas inside `f32[8,128]{1,0}`
+        # shape brackets/layouts and nested tuple types are not separators
         depth = 0
         out, cur = [], []
         for ch in self.rest:
-            if ch == "(":
+            if ch in "([{":
                 depth += 1
-            elif ch == ")":
-                if depth == 0:
+            elif ch in ")]}":
+                if ch == ")" and depth == 0:
                     break
                 depth -= 1
             if ch == "," and depth == 0:
@@ -92,7 +95,16 @@ class Instr:
                 cur.append(ch)
         if cur:
             out.append("".join(cur).strip())
-        return [o.lstrip("%") for o in out if o.strip()]
+        # each operand is `[type] %name` (type optional, tuple types allowed);
+        # the LAST %token is the name. %-less operands (constant literals)
+        # pass through raw.
+        names = []
+        for o in out:
+            if not o:
+                continue
+            refs = re.findall(r"%([\w.\-]+)", o)
+            names.append(refs[-1] if refs else o.lstrip("%"))
+        return names
 
 
 @dataclasses.dataclass
@@ -104,6 +116,57 @@ class Computation:
 
 
 _COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _split_instr(line: str) -> Optional[Tuple[str, str, str, str]]:
+    """`[ROOT] %name = <type> <opcode>(<rest>` -> (name, type, opcode, rest).
+
+    Handles tuple result types — `(s32[], f32[8,128]{1,0}) while(...)` — by
+    balanced-paren scanning, which no single regex over the line can.
+    """
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:].lstrip()
+    m = _NAME_EQ_RE.match(s)
+    if m is None:
+        return None
+    name = m.group(1)
+    s = s[m.end():]
+    if s.startswith("("):  # tuple type: scan to the matching close paren
+        depth = 0
+        end = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        type_str, s = s[:end], s[end:].lstrip()
+    else:
+        m = _BARE_TYPE_RE.match(s)
+        if m is None:
+            return None
+        end = m.end()
+        if end < len(s) and s[end] == "{":
+            # layout annotation — may nest parens/colons: {1,0:T(8,128)S(5)}
+            depth = 0
+            for i in range(end, len(s)):
+                if s[i] in "({":
+                    depth += 1
+                elif s[i] in ")}":
+                    depth -= 1
+                    if depth == 0:
+                        end = i + 1
+                        break
+        type_str, s = s[:end], s[end:].lstrip()
+        if not s:
+            return None
+    m = _OPCODE_RE.match(s)
+    if m is None:
+        return None
+    return name, type_str, m.group(1), s[m.end():]
 
 
 def parse_module(text: str) -> Dict[str, Computation]:
@@ -121,9 +184,11 @@ def parse_module(text: str) -> Dict[str, Computation]:
             comps[cur.name] = cur
             cur = None
             continue
-        m = _INSTR_RE.match(line)
-        if m:
-            name, type_str, opcode, rest = m.groups()
+        if not line.startswith((" ", "\t")):
+            continue
+        parts = _split_instr(line)
+        if parts:
+            name, type_str, opcode, rest = parts
             inst = Instr(name, type_str.strip(), opcode, rest)
             cur.instrs[name] = inst
             cur.order.append(name)
@@ -135,8 +200,17 @@ def _attr(rest: str, key: str) -> Optional[str]:
     return m.group(1) if m else None
 
 
-def _trip_count(cond: Computation) -> int:
-    """jax scans lower to `lt(counter, constant(N))` conditions."""
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+
+
+def _trip_count(inst: Instr, cond: Optional[Computation]) -> int:
+    """Loop trip count: XLA's known_trip_count backend_config when present,
+    else the `lt(counter, constant(N))` comparison constant in the cond."""
+    m = _TRIP_RE.search(inst.rest)
+    if m:
+        return int(m.group(1))
+    if cond is None:
+        return 1
     consts = []
     for i in cond.instrs.values():
         if i.opcode == "constant":
@@ -201,7 +275,7 @@ def _comp_costs(comp: Computation, comps: Dict[str, Computation],
         if op == "while":
             body = _attr(inst.rest, "body")
             cond = _attr(inst.rest, "condition")
-            trips = _trip_count(comps[cond]) if cond in comps else 1
+            trips = _trip_count(inst, comps.get(cond))
             if body in comps:
                 total = total + _comp_costs(comps[body], comps, memo, True).scaled(trips)
             continue

@@ -1,0 +1,41 @@
+"""Test-support utilities: optional-dependency shims for the suite."""
+from __future__ import annotations
+
+
+def optional_hypothesis():
+    """Import hypothesis if present, else return pytest-skipping stand-ins.
+
+    Returns ``(given, settings, st, available)``. When hypothesis is absent
+    (it is an optional test extra — see pyproject.toml), ``@given(...)``
+    replaces the property test with a zero-argument function that calls
+    ``pytest.skip``, so the *non-property* tests in the same module still
+    collect and run instead of the whole module hard-erroring at import.
+    """
+    try:
+        from hypothesis import given, settings, strategies as st
+
+        return given, settings, st, True
+    except ImportError:
+        import pytest
+
+        class _AnyStrategy:
+            """st.integers(...) etc. — only evaluated at decoration time."""
+
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        def given(*_a, **_k):
+            def deco(fn):
+                def skipper():
+                    pytest.skip("hypothesis not installed (optional test extra)")
+
+                skipper.__name__ = fn.__name__
+                skipper.__doc__ = fn.__doc__
+                return skipper
+
+            return deco
+
+        def settings(*_a, **_k):
+            return lambda fn: fn
+
+        return given, settings, _AnyStrategy(), False

@@ -33,6 +33,7 @@ def test_train_loss_decreases(mesh):
     assert int(state["opt"].step) == 12
 
 
+@pytest.mark.slow  # compiles two full train steps of a second architecture
 def test_grad_accum_equivalence(mesh):
     """accum=2 over a batch must equal accum=1 over the same batch."""
     cfg = configs.smoke("llama3.2-3b")
@@ -76,6 +77,7 @@ def test_state_specs_match_init(mesh):
     jax.tree.map(chk, state, specs)
 
 
+@pytest.mark.slow  # 3 full train-step compiles; remat is a compile-level knob
 def test_remat_modes_same_loss(mesh):
     cfg = configs.smoke("llama3.2-3b")
     batch = {"tokens": jnp.ones((2, 16), jnp.int32), "labels": jnp.ones((2, 16), jnp.int32)}

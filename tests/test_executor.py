@@ -1,0 +1,105 @@
+"""InfinityExecutor: engine factory, protocol conformance, and loss /
+grad-norm parity of the explicit ZeRO-3 engine across the three Infinity
+tiers (device HBM / pinned host / NVMe) on a tiny dense config."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import RunConfig, TrainConfig, make_offload, make_parallel
+from repro.core.engine import ZeroInfinityEngine
+from repro.core.executor import EngineProtocol, InfinityExecutor, make_engine
+from repro.core.zero import ExplicitZero3Engine
+from repro.launch.mesh import make_local_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_local_mesh(1, 1)
+
+
+def _tiny_cfg():
+    return dataclasses.replace(configs.smoke("smollm-135m"), n_layers=2)
+
+
+def _batch(cfg):
+    return {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size),
+            "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab_size)}
+
+
+def _run_tier(mesh, engine, tier, nvme_dir, steps=3):
+    cfg = _tiny_cfg()
+    # remat="none": smallest autodiff graph -> fastest CPU compile (tier-1)
+    run = RunConfig(model=cfg, parallel=make_parallel(engine, remat="none"),
+                    offload=make_offload(tier, nvme_dir=str(nvme_dir)),
+                    train=TrainConfig(lr=3e-3, warmup_steps=2))
+    ex = InfinityExecutor(run, mesh)
+    state = ex.init_state(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    step = ex.make_train_step()
+    traj = []
+    metrics = {}
+    for _ in range(steps):
+        state, metrics = step(state, batch)
+        traj.append((float(metrics["loss"]), float(metrics["grad_norm"])))
+    return np.asarray(traj), metrics, ex
+
+
+def test_factory_selects_engine(mesh):
+    run = RunConfig(model=_tiny_cfg(), parallel=make_parallel("zero3"))
+    eng = make_engine(run, mesh)
+    assert isinstance(eng, ExplicitZero3Engine)
+    assert isinstance(eng, EngineProtocol)
+    run = RunConfig(model=_tiny_cfg(), parallel=make_parallel("pjit"))
+    eng = make_engine(run, mesh)
+    assert isinstance(eng, ZeroInfinityEngine)
+    assert isinstance(eng, EngineProtocol)
+
+
+@pytest.fixture(scope="module")
+def device_reference(mesh, tmp_path_factory):
+    """Explicit-engine device-tier trajectory, shared across parity tests."""
+    traj, _, _ = _run_tier(mesh, "zero3", "device", tmp_path_factory.mktemp("dev"))
+    return traj
+
+
+def test_explicit_engine_tier_parity(mesh, tmp_path, device_reference):
+    """Tentpole acceptance: identical loss/grad-norm trajectories for
+    offload in {device, host, nvme} through one executor interface."""
+    device = device_reference
+    host, _, _ = _run_tier(mesh, "zero3", "host", tmp_path / "h")
+    nvme, nvme_metrics, ex = _run_tier(mesh, "zero3", "nvme", tmp_path / "n")
+    # host tier streams the same values through another memory kind: exact
+    np.testing.assert_array_equal(host, device)
+    # nvme tier runs the update in the streamed CPU pipeline: fp32 rounding
+    np.testing.assert_allclose(nvme, device, rtol=2e-3, atol=2e-3)
+    # losses must actually move (the three runs aren't frozen replicas)
+    assert device[-1, 0] < device[0, 0]
+    # bandwidth counters surface in step metrics; states live per-rank
+    assert nvme_metrics["nvme_bytes_read"] > 0
+    assert nvme_metrics["nvme_bytes_written"] > 0
+    assert all(k.startswith("rank0/") for k in ex.store.keys())
+
+
+def test_gspmd_engine_nvme_matches_explicit(mesh, tmp_path, device_reference):
+    """Cross-engine parity: the GSPMD engine on the NVMe tier lands on the
+    same trajectory as the explicit engine on the device tier — the ZeRO
+    schedule and the streamed optimizer are numerics-preserving."""
+    nvme, metrics, _ = _run_tier(mesh, "pjit", "nvme", tmp_path / "n", steps=2)
+    np.testing.assert_allclose(nvme, device_reference[:2], rtol=2e-3, atol=2e-3)
+    assert metrics["nvme_bytes_read"] > 0
+
+
+def test_executor_lower_train(mesh):
+    """Both engines lower a train step through the one executor interface."""
+    from repro.config import ShapeConfig
+
+    shape = ShapeConfig("tiny", 16, 2, "train")
+    for engine in ("zero3", "pjit"):
+        run = RunConfig(model=_tiny_cfg(), parallel=make_parallel(engine),
+                        train=TrainConfig())
+        ex = InfinityExecutor(run, mesh)
+        lowered = ex.lower_train(shape)
+        assert "dot" in lowered.as_text() or "while" in lowered.as_text()

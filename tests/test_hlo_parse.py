@@ -72,6 +72,23 @@ def test_nested_scan_flops():
     assert costs.flops == pytest.approx(2 * 4 * d * d * 15, rel=0.01)
 
 
+def test_tpu_layout_annotations_parse():
+    """TPU HLO carries tiled/memory-space layouts — {1,0:T(8,128)S(5)} —
+    which must not break type parsing or drop instructions."""
+    txt = """ENTRY %main (p: f32[8,128]) -> f32[8,128] {
+  %p = f32[8,128]{1,0:T(8,128)} parameter(0)
+  %q = f32[8,128]{1,0:T(8,128)S(5)} copy(f32[8,128]{1,0:T(8,128)} %p)
+  ROOT %d = f32[8,128]{1,0} dot(f32[8,128]{1,0:T(8,128)S(5)} %q, f32[8,128]{1,0:T(8,128)} %q), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    comps = hp.parse_module(txt)
+    entry = comps["main"]
+    assert entry.instrs["q"].opcode == "copy"
+    assert entry.instrs["d"].operands() == ["q", "q"]
+    costs = hp.module_costs(txt)
+    assert costs.flops == pytest.approx(2 * 8 * 128 * 128)
+
+
 def test_collective_bytes_reported():
     """vmapped psum via shard_map on 1 device still lowers an all-reduce."""
     mesh = jax.make_mesh((1,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))

@@ -4,7 +4,9 @@ correctness invariants behind mamba2's SSD and recurrentgemma's RG-LRU."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from repro.testing import optional_hypothesis
+
+given, settings, st, HAVE_HYPOTHESIS = optional_hypothesis()
 
 from repro.models.mamba2 import ssd_chunked
 from repro.models.rglru import rg_lru
