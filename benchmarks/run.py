@@ -263,11 +263,14 @@ def train_step_micro() -> None:
 
 
 # ---------------------------------------------------------------------------
-# Executor: any engine x any offload tier through InfinityExecutor
-# (--engine pjit|zero3 --offload device|host|nvme selects the cell)
+# Executor: any engine x any (param, grad, opt) tier through InfinityExecutor
+# (--engine pjit|zero3 --offload[-param|-grad] device|host|nvme selects the
+# cell). Per-tier throughput comes from the LAST step's metric deltas — the
+# per-step effective bandwidth, never cumulative bytes over the whole run.
 # ---------------------------------------------------------------------------
 
-def executor_micro(engine: str = "pjit", tier: str = "device") -> None:
+def executor_micro(engine: str = "pjit", tier: str = "device",
+                   param_tier: str = "device", grad_tier: str = "device") -> None:
     import jax
     import jax.numpy as jnp
 
@@ -277,11 +280,14 @@ def executor_micro(engine: str = "pjit", tier: str = "device") -> None:
     from repro.launch.mesh import make_local_mesh
 
     nvme_dir = tempfile.mkdtemp(prefix="repro_bench_exec")
+    cell = f"{engine}_p{param_tier}_g{grad_tier}_o{tier}"
     try:
         mesh = make_local_mesh(1, 1)
         run = RunConfig(model=configs.smoke("smollm-135m"),
                         parallel=make_parallel(engine),
-                        offload=make_offload(tier, nvme_dir=nvme_dir),
+                        offload=make_offload(tier, param_tier=param_tier,
+                                             grad_tier=grad_tier,
+                                             nvme_dir=nvme_dir),
                         train=TrainConfig())
         ex = InfinityExecutor(run, mesh)
         state = ex.init_state(jax.random.PRNGKey(0))
@@ -296,10 +302,16 @@ def executor_micro(engine: str = "pjit", tier: str = "device") -> None:
         jax.block_until_ready(m["loss"])
         us = (time.perf_counter() - t0) / 3 * 1e6
         toks = 4 * 128
-        emit(f"executor/{engine}_{tier}/train_step", us,
-             f"{toks / (us / 1e6):.0f}tok_s")
+        emit(f"executor/{cell}/train_step", us, f"{toks / (us / 1e6):.0f}tok_s")
+        # per-tier effective bandwidth roofline terms: the final step's
+        # per-step counters (param-in / grad-out / opt-read/write)
+        for k in ("param_in", "param_out", "grad_out", "opt_read", "opt_write"):
+            if f"{k}_bytes" in m:
+                emit(f"executor/{cell}/step_{k}_bytes", 0.0, int(m[f"{k}_bytes"]))
+                emit(f"executor/{cell}/step_{k}_gbps", 0.0,
+                     f"{m[f'{k}_gbps']:.3f}")
         for k, v in ex.bandwidth_stats().items():
-            emit(f"executor/{engine}_{tier}/nvme_{k}", 0.0,
+            emit(f"executor/{cell}/run_{k}", 0.0,
                  f"{v:.3f}" if isinstance(v, float) else v)
     finally:
         shutil.rmtree(nvme_dir, ignore_errors=True)
@@ -401,12 +413,19 @@ def main() -> None:
     ap.add_argument("--offload", default="device",
                     choices=["device", "host", "nvme"],
                     help="optimizer tier for the `executor` bench")
+    ap.add_argument("--offload-param", default="device",
+                    choices=["device", "host", "nvme"],
+                    help="parameter tier for the `executor` bench")
+    ap.add_argument("--offload-grad", default="device",
+                    choices=["device", "host", "nvme"],
+                    help="gradient-drain tier for the `executor` bench")
     args = ap.parse_args()
     keys = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for k in keys:
         if k == "executor":
-            executor_micro(args.engine, args.offload)
+            executor_micro(args.engine, args.offload,
+                           args.offload_param, args.offload_grad)
         else:
             BENCHES[k]()
 

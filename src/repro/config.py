@@ -105,19 +105,44 @@ class ParallelConfig:
 
 @dataclasses.dataclass(frozen=True)
 class OffloadConfig:
-    """Infinity offload engine placement (paper Table 2 tiers)."""
+    """Infinity offload engine placement (paper Table 2 tiers).
+
+    Each model-state class gets its own tier, independently:
+      * ``param_tier``  — bf16 compute params. ``host`` places them in the
+        backend's pinned-host memory kind (streamed to HBM ahead of the
+        per-layer all-gather); ``nvme`` round-trips each rank's flat shard
+        through the ``NvmeStore`` with a layer read-ahead window.
+      * ``grad_tier``   — reduce-scattered fp32 gradients. ``host``/``nvme``
+        drain them out of device memory right after the backward, overlapped
+        with the streamed optimizer pipeline that consumes them.
+      * ``opt_tier``    — fp32 master/m/v. ``host`` keeps them in pinned host
+        memory; ``nvme`` streams them chunk-by-chunk (read ‖ update ‖ write).
+    """
 
     param_tier: str = "device"  # device | host | nvme
+    grad_tier: str = "device"  # device | host | nvme
     opt_tier: str = "device"  # device | host | nvme
     act_tier: str = "device"  # device | host    (activation checkpoints)
     nvme_dir: str = "/tmp/repro_nvme"
-    pinned_buffer_mb: int = 64  # buffer-pool budget of the NvmeStore
+    pinned_buffer_mb: int = 64  # shared pinned buffer-pool budget (all stores)
     overlap: bool = True  # async prefetch/writeback threads
+    param_read_ahead: int = 2  # NVMe param tier: layers of read-ahead window
 
     def __post_init__(self):
-        for t in (self.param_tier, self.opt_tier):
+        for t in (self.param_tier, self.grad_tier, self.opt_tier):
             assert t in ("device", "host", "nvme"), t
         assert self.act_tier in ("device", "host")
+        assert self.param_read_ahead >= 1
+
+    @property
+    def opt_offgraph(self) -> bool:
+        """Whether the optimizer update runs outside the jitted step.
+
+        True when optimizer states live on NVMe (they never enter the graph)
+        or when gradients drain to a slow tier (the update must consume them
+        host-side after the drain). The jitted step is then grads-only.
+        """
+        return self.opt_tier == "nvme" or self.grad_tier != "device"
 
 
 def make_parallel(engine: str = "pjit", **kw) -> ParallelConfig:
@@ -129,10 +154,16 @@ def make_parallel(engine: str = "pjit", **kw) -> ParallelConfig:
     return ParallelConfig(engine=engine, **kw)
 
 
-def make_offload(tier: str = "device", **kw) -> OffloadConfig:
-    """Single-knob tier selection (`device` | `host` | `nvme`), applied to
-    the optimizer states — identical meaning for both engines."""
-    return OffloadConfig(opt_tier=tier, **kw)
+def make_offload(tier: str = "device", *, param_tier: str = "device",
+                 grad_tier: str = "device", **kw) -> OffloadConfig:
+    """Tier selection with identical meaning for both engines.
+
+    ``tier`` is the optimizer tier (the original single knob);
+    ``param_tier`` / ``grad_tier`` place the other two state classes
+    independently (`device` | `host` | `nvme` each).
+    """
+    return OffloadConfig(opt_tier=tier, param_tier=param_tier,
+                         grad_tier=grad_tier, **kw)
 
 
 @dataclasses.dataclass(frozen=True)

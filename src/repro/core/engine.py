@@ -84,13 +84,13 @@ class ZeroInfinityEngine:
                                     self._tier_kind(self.run.offload.opt_tier))
 
     def state_specs(self):
-        if self.run.offload.opt_tier == "nvme":
+        if self.run.offload.opt_offgraph:
             return {"params": self.param_specs()}
         return {"params": self.param_specs(), "opt": self._opt_state_from(self.opt_specs())}
 
     def state_shardings(self):
         """Sharding tree matching ``init_state`` (EngineProtocol)."""
-        if self.run.offload.opt_tier == "nvme":
+        if self.run.offload.opt_offgraph:
             return {"params": self.param_shardings()}
         return {"params": self.param_shardings(),
                 "opt": self._opt_state_from(self.opt_shardings())}
@@ -139,9 +139,9 @@ class ZeroInfinityEngine:
 
         with compat.set_mesh(self.mesh):
             params = jax.jit(_init, out_shardings=shardings)(rng)
-            if self.run.offload.opt_tier == "nvme":
+            if self.run.offload.opt_offgraph:
                 # master/m/v never enter device memory: they live in the
-                # NvmeStore (seeded by InfinityExecutor from these params)
+                # executor's ArrayStore (seeded from these params)
                 return {"params": params}
             opt = jax.jit(adam.init_state,
                           out_shardings=self._opt_state_from(self.opt_shardings()))(params)
@@ -157,7 +157,10 @@ class ZeroInfinityEngine:
         pc = run.parallel
         bundle = self.bundle
         grad_shardings = self.grad_shardings()
-        opt_host = run.offload.opt_tier == "host" and self.host_ok
+        opt_host = (run.offload.opt_tier == "host" and self.host_ok
+                    and not grads_only)
+        param_host = run.offload.param_tier == "host" and self.host_ok
+        param_shardings = self.param_shardings() if param_host else None
 
         def grads_of(params, batch):
             accum = pc.grad_accum
@@ -180,7 +183,12 @@ class ZeroInfinityEngine:
             return loss * inv, jax.tree.map(lambda g: g * inv, grads)
 
         def train_step(state, batch):
-            params, opt = state["params"], state.get("opt")  # no opt on nvme tier
+            params, opt = state["params"], state.get("opt")  # no opt offgraph
+            if param_host:  # stream bf16 params host -> HBM ahead of the
+                # per-layer all-gathers (async copies under latency hiding)
+                params = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s.with_memory_kind("device")),
+                    params, param_shardings)
             if opt_host:  # stream optimizer states host -> HBM for the update
                 opt = jax.tree.map(
                     lambda x, s: jax.device_put(x, s.with_memory_kind("device")),
@@ -193,6 +201,9 @@ class ZeroInfinityEngine:
                 gnorm = _global_norm(grads)
                 return grads, {"loss": loss, "grad_norm": gnorm}
             new_params, new_opt = adam.apply_updates(grads, opt, tc, params_prev=params)
+            if param_host:  # updated bf16 params return to pinned host memory
+                new_params = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s), new_params, param_shardings)
             if opt_host:  # stream updated states back to pinned host memory
                 new_opt = jax.tree.map(
                     lambda x, s: jax.device_put(x, s), new_opt,
@@ -203,7 +214,10 @@ class ZeroInfinityEngine:
 
         return train_step
 
-    def lower_train(self, shape: ShapeConfig, *, grads_only: bool = False, donate: bool = True):
+    def lower_train(self, shape: ShapeConfig, *, grads_only: Optional[bool] = None,
+                    donate: bool = True):
+        if grads_only is None:  # resolve from the configured tiers
+            grads_only = self.run.offload.opt_offgraph
         step = self.make_train_step(grads_only=grads_only)
         state_specs = self.state_specs()
         batch = self.batch_specs(shape)

@@ -2,7 +2,8 @@
 
 The paper's claim (Secs. 5-6) is a *single* engine that simultaneously
 exploits GPU/TPU HBM, pinned host DRAM, and NVMe with an overlap-centric
-schedule. This module is that unification point for the repo's two engines:
+schedule — for *all* model states, not just the optimizer. This module is
+that unification point for the repo's two engines:
 
   * ``ZeroInfinityEngine`` (core/engine.py) — GSPMD-native; XLA places the
     ZeRO collectives from shardings.
@@ -12,19 +13,30 @@ schedule. This module is that unification point for the repo's two engines:
 Both satisfy ``EngineProtocol`` (init_state / make_train_step /
 state_shardings / lower_train); ``make_engine`` selects one from
 ``RunConfig.parallel.engine``. ``InfinityExecutor`` then drives the
-configured optimizer tier:
+configured placement, independently per state class
+(``offload.param_tier`` / ``grad_tier`` / ``opt_tier``):
 
-  * device / host — one jitted step; the host tier streams optimizer states
-    through the backend's host memory kind in-graph.
-  * nvme — the jitted step computes reduce-scattered grads; the executor
-    streams master/m/v through ``NvmeStore`` with ``ChunkedAdamOffload``'s
-    read(k+1) || update(k) || write(k-1) pipeline. For the explicit engine
-    the store holds each rank's (L, P/dp) flat shard under its own key
-    namespace (``rank<r>/flat``) — the paper's per-worker NVMe partition —
-    and the measured NVMe bandwidth counters are surfaced in step metrics.
+  * in-graph tiers (device, and host via ``memory_kind``) — one jitted
+    step; host-tier params/optimizer states stream HBM<->host in-graph.
+  * out-of-graph tiers (``opt_offgraph``: NVMe optimizer states and/or
+    host/NVMe gradient drains) — the jitted step computes reduce-scattered
+    grads; gradients drain into the grad store, and master/m/v stream
+    through the opt store with ``ChunkedAdamOffload``'s
+    read(k+1) || update(k) || write(k-1) pipeline.
+  * ``param_tier="nvme"`` — bf16 params are slow-tier resident: each rank's
+    (L, P/dp) flat shard (explicit engine; the paper's per-worker NVMe
+    partition) or each parameter leaf (GSPMD engine) round-trips through
+    the param store via ``ParamStreamer``'s read-ahead window.
+
+Every store shares one ``PinnedBufferPool`` (the paper's fixed pinned-
+memory supply), and per-step metrics surface per-tier bandwidth counters:
+``param_in_*`` / ``param_out_*``, ``grad_out_*``, ``opt_read_*`` /
+``opt_write_*`` — per-step deltas, so the benchmark harness can report an
+effective-bandwidth roofline per tier.
 """
 from __future__ import annotations
 
+import os
 from typing import Dict, Optional, Protocol, runtime_checkable
 
 import jax
@@ -35,7 +47,8 @@ import numpy as np
 from repro import compat
 from repro.config import RunConfig, ShapeConfig
 from repro.core.engine import ZeroInfinityEngine
-from repro.core.offload import ChunkedAdamOffload, NvmeStore
+from repro.core.offload import (ArrayStore, ChunkedAdamOffload, HostArrayStore,
+                                NvmeStore, ParamStreamer, PinnedBufferPool)
 from repro.core.zero import ExplicitZero3Engine
 from repro.optim import adam as adam_mod
 
@@ -76,9 +89,9 @@ class InfinityExecutor:
     """Drives an engine through the configured three-tier placement.
 
     ``train_step(state, batch)`` is a host-level callable with one signature
-    for every (engine, tier) combination; per-step metrics always include
-    loss/grad_norm/lr and, on the NVMe tier, the store's measured
-    read/write bandwidth.
+    for every (engine, param/grad/opt tier) combination; per-step metrics
+    always include loss/grad_norm/lr and, for every slow-tier state class,
+    that tier's measured per-step bandwidth counters.
     """
 
     def __init__(self, run: RunConfig, mesh, *, engine: Optional[EngineProtocol] = None):
@@ -86,51 +99,87 @@ class InfinityExecutor:
         self.mesh = mesh
         self.engine = engine if engine is not None else make_engine(run, mesh)
         self.is_explicit = isinstance(self.engine, ExplicitZero3Engine)
-        if self.is_explicit and run.offload.param_tier != "device":
-            raise NotImplementedError(
-                "explicit engine: param_tier host/nvme not implemented — "
-                "bf16 params stay in HBM (the paper's fp16-param NVMe tier "
-                "maps to the GSPMD engine's memory_kind path)")
-        self.nvme = run.offload.opt_tier == "nvme"
-        self.store: Optional[NvmeStore] = None
+        off = run.offload
+        self.offgraph = off.opt_offgraph
+        self.param_nvme = off.param_tier == "nvme"
+        self.grad_offload = off.grad_tier != "device"
+        # shared pinned staging budget across all of this executor's stores
+        self._pool = PinnedBufferPool(off.pinned_buffer_mb << 20)
+        self.opt_store: Optional[ArrayStore] = None
+        self.grad_store: Optional[ArrayStore] = None
+        self.param_store: Optional[ArrayStore] = None
         self.offload: Optional[ChunkedAdamOffload] = None
+        self.param_stream: Optional[ParamStreamer] = None
         self._rank_of = {d: r for r, d in enumerate(np.asarray(mesh.devices).flat)}
         self._step_fn = None
+        self._param_shardings_cache = None
 
     # ------------------------------------------------------------------
     # state
     # ------------------------------------------------------------------
 
-    def init_state(self, rng: jax.Array):
+    def init_state(self, rng: jax.Array, *, seed_stores: bool = True):
+        """Engine init + slow-tier store seeding. Pass ``seed_stores=False``
+        when a checkpoint restore (which re-seeds from the restored state)
+        immediately follows — it skips a throwaway full-model store write."""
         state = self.engine.init_state(rng)
-        if self.nvme:
+        if seed_stores:
             self.reseed(state)
         return state
 
+    def _make_store(self, tier: str, name: str) -> ArrayStore:
+        """Slow-tier store for one state class; NVMe stores get their own
+        subdirectory (key namespaces never collide across classes) and all
+        stores share the executor's pinned pool."""
+        off = self.run.offload
+        if tier == "nvme":
+            return NvmeStore(os.path.join(off.nvme_dir, name), pool=self._pool,
+                             overlap=off.overlap)
+        return HostArrayStore(pool=self._pool, overlap=off.overlap)
+
     def reseed(self, state, step: int = 0) -> None:
-        """(Re)populate the NVMe store from ``state`` — called by
+        """(Re)populate the slow-tier stores from ``state`` — called by
         ``init_state`` and after a checkpoint restore (m/v restart at zero,
         matching an optimizer-state-free checkpoint)."""
-        if not self.nvme:
-            return
         off = self.run.offload
-        if self.store is None:
-            self.store = NvmeStore(off.nvme_dir, pool_mb=off.pinned_buffer_mb,
-                                   overlap=off.overlap)
-        self.offload = ChunkedAdamOffload(self.store)
-        if self.is_explicit:
-            # seed per-rank key namespaces with the f32 view of each rank's
-            # (L, P/dp) bf16 shard (exact: bf16 -> f32 is lossless). A
-            # checkpoint-restored flat may live on one device — re-shard
+        if self.is_explicit and (self.offgraph or self.param_nvme):
+            # A checkpoint-restored flat may live on one device — re-shard
             # first so the rank partition matches the mesh.
             flat = jax.device_put(state["flat"],
                                   self.engine.state_shardings()["flat"])
-            self.offload.init_from_params(self._rank_shards(flat))
-        else:
-            self.offload.init_from_params(
-                {k: np.asarray(v) for k, v in
-                 _flatten_with_paths(state["params"]).items()})
-        self.offload.step_count = step
+        if self.offgraph:
+            # stores are reused across reseeds (restart/restore re-enters
+            # here): their worker threads and cumulative counters persist,
+            # only the contents are rewritten
+            if self.opt_store is None:
+                self.opt_store = self._make_store(off.opt_tier, "opt")
+            self.offload = ChunkedAdamOffload(self.opt_store)
+            if self.is_explicit:
+                # seed per-rank key namespaces with the f32 view of each
+                # rank's (L, P/dp) bf16 shard (exact: bf16 -> f32 is
+                # lossless) — the paper's per-worker slow-tier partition.
+                self.offload.init_from_params(self._rank_shards(flat))
+            else:
+                self.offload.init_from_params(
+                    {k: np.asarray(v) for k, v in
+                     _flatten_with_paths(state["params"]).items()})
+            self.offload.step_count = step
+        if self.grad_offload and self.grad_store is None:
+            self.grad_store = self._make_store(off.grad_tier, "grad")
+        if self.param_nvme:
+            if self.param_store is None:
+                self.param_store = self._make_store("nvme", "param")
+            self.param_stream = ParamStreamer(self.param_store,
+                                              read_ahead=off.param_read_ahead)
+            if self.is_explicit:
+                self.param_stream.seed(
+                    {f"rank{r}": a for r, a in
+                     self._rank_arrays(flat).items()}, row_split=True)
+            else:
+                self.param_stream.seed(
+                    {k: np.asarray(v) for k, v in
+                     _flatten_with_paths(state["params"]).items()},
+                    row_split=False)
 
     def state_shardings(self):
         return self.engine.state_shardings()
@@ -150,6 +199,49 @@ class InfinityExecutor:
                 else eng.n_params_active())
 
     # ------------------------------------------------------------------
+    # tier-independent checkpoint views
+    # ------------------------------------------------------------------
+
+    def portable_state(self, state) -> dict:
+        """The tier-independent subtree of ``state`` — the leaves whose
+        presence/layout does not depend on the offload configuration, so a
+        checkpoint of it restores into an executor at *any* tier."""
+        if self.is_explicit:
+            return {k: state[k] for k in ("flat", "other", "other_opt", "step")}
+        return {"params": state["params"]}
+
+    def adopt_state(self, portable: dict, *, step: int = 0):
+        """Portable leaves -> a full state for this executor's tiers.
+
+        Streamed/in-graph optimizer moments restart at zero (the portable
+        checkpoint is optimizer-state-free for the big shards; the small
+        replicated 'other_opt' rides along on the explicit engine), and the
+        slow-tier stores are reseeded from the restored params.
+        """
+        shardings = self.engine.state_shardings()
+        if self.is_explicit:
+            state = dict(portable)
+            state = jax.device_put(
+                state, {k: shardings[k] for k in state})
+            if not self.offgraph:
+                flat32 = state["flat"].astype(jnp.float32)
+                state["master"] = jax.device_put(flat32, shardings["master"])
+                state["m"] = jax.device_put(jnp.zeros_like(flat32), shardings["m"])
+                state["v"] = jax.device_put(jnp.zeros_like(flat32), shardings["v"])
+        else:
+            params = jax.device_put(portable["params"], shardings["params"])
+            state = {"params": params}
+            if not self.offgraph:
+                master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+                zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                     params)
+                opt = adam_mod.AdamState(jnp.asarray(step, jnp.int32), master,
+                                         zeros, zeros)
+                state["opt"] = jax.device_put(opt, shardings["opt"])
+        self.reseed(state, step=step)
+        return state
+
+    # ------------------------------------------------------------------
     # the unified train step
     # ------------------------------------------------------------------
 
@@ -157,14 +249,18 @@ class InfinityExecutor:
         if self._step_fn is not None:
             return self._step_fn
         with compat.set_mesh(self.mesh):
-            jit_step = jax.jit(self.engine.make_train_step(grads_only=self.nvme))
+            jit_step = jax.jit(self.engine.make_train_step(grads_only=self.offgraph))
 
-        if not self.nvme:
-            step = jit_step  # device/host tiers are fully in-graph
-        elif self.is_explicit:
-            step = self._explicit_nvme_step(jit_step)
+        if not self.offgraph and not self.param_nvme:
+            step = jit_step  # fully in-graph (device/host tiers)
         else:
-            step = self._gspmd_nvme_step(jit_step)
+            if not self.offgraph:
+                inner = jit_step  # in-graph update; only params stream
+            elif self.is_explicit:
+                inner = self._explicit_offgraph_step(jit_step)
+            else:
+                inner = self._gspmd_offgraph_step(jit_step)
+            step = self._instrumented(inner)
         self._step_fn = step
         return step
 
@@ -172,68 +268,232 @@ class InfinityExecutor:
         return self.make_train_step()(state, batch)
 
     def lower_train(self, shape: ShapeConfig):
-        return self.engine.lower_train(shape, grads_only=self.nvme)
+        return self.engine.lower_train(shape, grads_only=self.offgraph)
 
     # ------------------------------------------------------------------
-    # NVMe tier: host-side streamed Adam
+    # slow-tier step variants
     # ------------------------------------------------------------------
 
-    def _explicit_nvme_step(self, jit_step):
+    def _instrumented(self, inner):
+        """Wrap a step with param streaming (slow-tier resident params) and
+        per-step per-tier bandwidth metrics."""
+
+        def step(state, batch):
+            marks = {name: s.mark() for name, s in self._active_stores()}
+            if self.param_nvme:
+                state = self._load_params(state)
+            new_state, metrics = inner(state, batch)
+            if self.param_nvme:
+                self._save_params(new_state)
+            if self.grad_store is not None:
+                self.grad_store.flush()  # retire this step's drain futures
+            return new_state, self._with_tier_metrics(metrics, marks)
+
+        return step
+
+    def _explicit_offgraph_step(self, jit_step):
         tc = self.run.train
 
         def step(state, batch):
             new_state, g32, metrics = jit_step(state, batch)
+            gflat = self._rank_shards(g32)
+            if self.grad_offload:
+                gflat = self._drain_grads(gflat)
             new_master = self.offload.step(
-                self._rank_shards(g32), lr=float(metrics["lr"]),
+                gflat, lr=float(metrics["lr"]),
                 beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
                 weight_decay=tc.weight_decay)
             new_state = dict(new_state)
             new_state["flat"] = self._assemble_flat(new_master, like=state["flat"])
-            return new_state, self._with_nvme_metrics(metrics)
+            return new_state, metrics
 
         return step
 
-    def _gspmd_nvme_step(self, jit_step):
+    def _gspmd_offgraph_step(self, jit_step):
         tc = self.run.train
+        param_host = self.run.offload.param_tier == "host"
+        # sharding pytree built once, not per step (it's a full tree walk)
+        param_shardings = (self.engine.state_shardings()["params"]
+                           if param_host else None)
 
         def step(state, batch):
             grads, metrics = jit_step(state, batch)
             gflat = {k: np.asarray(v).astype(np.float32)
                      for k, v in _flatten_with_paths(grads).items()}
+            if self.grad_offload:
+                gflat = self._drain_grads(gflat)
             lr = float(adam_mod.lr_at(tc, jnp.int32(self.offload.step_count + 1)))
             new_flat = self.offload.step(gflat, lr=lr, beta1=tc.beta1,
                                          beta2=tc.beta2, eps=tc.eps,
                                          weight_decay=tc.weight_decay)
             new_state = dict(state)
-            new_state["params"] = _unflatten_like(state["params"], new_flat)
-            metrics = dict(metrics, lr=lr)
-            return new_state, self._with_nvme_metrics(metrics)
+            params = _unflatten_like(state["params"], new_flat)
+            if param_host:
+                # keep the configured pinned-host residency after the
+                # host-side rebuild (plain jnp arrays land in device memory)
+                params = jax.device_put(params, param_shardings)
+            new_state["params"] = params
+            return new_state, dict(metrics, lr=lr)
 
         return step
 
+    # ------------------------------------------------------------------
+    # gradient drain (host/NVMe tier)
+    # ------------------------------------------------------------------
+
+    def _drain_grads(self, gflat: Dict[str, np.ndarray]) -> Dict[str, object]:
+        """Drain reduce-scattered fp32 grad shards to the grad tier. Each
+        leaf becomes a write-then-read ``roundtrip`` future resolving to the
+        store-resident copy; ``ChunkedAdamOffload.step`` resolves a leaf only
+        when its first chunk reaches the update stage, so later leaves'
+        drains overlap earlier leaves' read/update/write pipeline work."""
+        return {k: self.grad_store.roundtrip(f"{k}/g", g)
+                for k, g in gflat.items()}
+
+    # ------------------------------------------------------------------
+    # slow-tier resident parameters
+    # ------------------------------------------------------------------
+
+    def _load_params(self, state):
+        """Materialize params from the param store (read-ahead window) —
+        the store copy, not the carried state leaf, feeds the step."""
+        loaded = self.param_stream.load_all()
+        state = dict(state)
+        if self.is_explicit:
+            like = state["flat"]
+            state["flat"] = self._flat_from_ranks(
+                {self._rank_of[s.device]:
+                 loaded[f"rank{self._rank_of[s.device]}"]
+                 for s in like.addressable_shards}, like=like)
+        else:
+            if self._param_shardings_cache is None:  # one tree walk, cached
+                self._param_shardings_cache = self.engine.state_shardings()["params"]
+            state["params"] = jax.device_put(
+                _unflatten_like(state["params"], loaded),
+                self._param_shardings_cache)
+        return state
+
+    def _save_params(self, new_state) -> None:
+        """Write the step's updated params back to the param store."""
+        if self.is_explicit:
+            self.param_stream.save_all(
+                {f"rank{r}": a for r, a in
+                 self._rank_arrays(new_state["flat"]).items()})
+        else:
+            self.param_stream.save_all(
+                {k: np.asarray(v) for k, v in
+                 _flatten_with_paths(new_state["params"]).items()})
+
+    # ------------------------------------------------------------------
+    # rank-shard plumbing (explicit engine)
+    # ------------------------------------------------------------------
+
+    def _rank_arrays(self, arr) -> Dict[int, np.ndarray]:
+        """Global (L, P) array -> {rank: local (L, P/dp) ndarray} (own dtype)."""
+        return {self._rank_of[s.device]: np.asarray(s.data)
+                for s in arr.addressable_shards}
+
     def _rank_shards(self, arr) -> Dict[str, np.ndarray]:
         """Global (L, P) array -> {'rank<r>/flat': f32 local (L, P/dp)}."""
-        out = {}
-        for s in arr.addressable_shards:
-            r = self._rank_of[s.device]
-            out[f"rank{r}/flat"] = np.asarray(s.data).astype(np.float32)
-        return out
+        return {f"rank{r}/flat": a.astype(np.float32)
+                for r, a in self._rank_arrays(arr).items()}
 
     def _assemble_flat(self, new_master: Dict[str, np.ndarray], *, like):
         """Per-rank f32 masters -> global bf16 flat array sharded like ``like``."""
+        return self._flat_from_ranks(
+            {r: new_master[f"rank{r}/flat"] for r in
+             (self._rank_of[s.device] for s in like.addressable_shards)},
+            like=like)
+
+    def _flat_from_ranks(self, by_rank: Dict[int, np.ndarray], *, like):
+        """{rank: (L, P/dp) ndarray} -> global bf16 array placed like
+        ``like`` — including its memory kind: the shards are assembled in
+        device memory first, then streamed to a pinned-host target sharding
+        (per-device assembly cannot target a non-default memory kind)."""
+        sh = like.sharding
+        kind = getattr(sh, "memory_kind", None)
+        dev_kind = compat.default_memory_kind()
+        asm_sh = sh
+        if kind is not None and dev_kind is not None and kind != dev_kind:
+            asm_sh = sh.with_memory_kind(dev_kind)
         pieces = []
         for s in like.addressable_shards:
-            r = self._rank_of[s.device]
-            piece = new_master[f"rank{r}/flat"].astype(ml_dtypes.bfloat16)
+            piece = np.asarray(by_rank[self._rank_of[s.device]]).astype(
+                ml_dtypes.bfloat16)
             pieces.append(jax.device_put(piece, s.device))
-        return jax.make_array_from_single_device_arrays(
-            like.shape, like.sharding, pieces)
+        arr = jax.make_array_from_single_device_arrays(like.shape, asm_sh, pieces)
+        if asm_sh is not sh:
+            arr = jax.device_put(arr, sh)
+        return arr
 
-    def _with_nvme_metrics(self, metrics) -> dict:
-        stats = self.store.bandwidth_stats()
+    # ------------------------------------------------------------------
+    # per-tier bandwidth metrics
+    # ------------------------------------------------------------------
+
+    def _active_stores(self):
+        out = []
+        if self.param_store is not None:
+            out.append(("param", self.param_store))
+        if self.grad_store is not None:
+            out.append(("grad", self.grad_store))
+        if self.opt_store is not None:
+            out.append(("opt", self.opt_store))
+        return out
+
+    def _with_tier_metrics(self, metrics, marks) -> dict:
+        """Per-step, per-tier counters: param-in (store->device), param-out
+        (write-back), grad-out (drain), opt-read/opt-write (the streamed
+        Adam pipeline). All values are this step's deltas — never cumulative
+        totals — plus the legacy ``nvme_*`` aggregate over NVMe-backed
+        stores for run summaries."""
         out = dict(metrics)
-        out.update({f"nvme_{k}": v for k, v in stats.items()})
+        nvme = {"bytes_read": 0, "bytes_written": 0}
+        for name, store in self._active_stores():
+            d = store.delta_since(marks[name])
+            if name == "param":
+                out["param_in_bytes"] = d["bytes_read"]
+                out["param_in_gbps"] = d["read_gbps"]
+                out["param_out_bytes"] = d["bytes_written"]
+                out["param_out_gbps"] = d["write_gbps"]
+            elif name == "grad":
+                out["grad_out_bytes"] = d["bytes_written"]
+                out["grad_out_gbps"] = d["write_gbps"]
+            else:
+                out["opt_read_bytes"] = d["bytes_read"]
+                out["opt_read_gbps"] = d["read_gbps"]
+                out["opt_write_bytes"] = d["bytes_written"]
+                out["opt_write_gbps"] = d["write_gbps"]
+            if store.kind == "nvme":
+                nvme["bytes_read"] += d["bytes_read"]
+                nvme["bytes_written"] += d["bytes_written"]
+        out["nvme_bytes_read"] = nvme["bytes_read"]
+        out["nvme_bytes_written"] = nvme["bytes_written"]
+        out["nvme_pinned_peak_bytes"] = self._pool.peak_outstanding
         return out
 
     def bandwidth_stats(self) -> dict:
-        return self.store.bandwidth_stats() if self.store is not None else {}
+        """Cumulative (whole-run) aggregate over every slow-tier store, per
+        state class and combined — the run-summary counterpart of the
+        per-step metrics."""
+        stores = self._active_stores()
+        if not stores:
+            return {}
+        out = {}
+        tot_r = tot_w = 0
+        tot_rt = tot_wt = 0.0
+        for name, store in stores:
+            s = store.bandwidth_stats()  # one locked snapshot per store
+            out[f"{name}_bytes_read"] = s["bytes_read"]
+            out[f"{name}_bytes_written"] = s["bytes_written"]
+            out[f"{name}_read_gbps"] = s["read_gbps"]
+            out[f"{name}_write_gbps"] = s["write_gbps"]
+            tot_r += s["bytes_read"]
+            tot_w += s["bytes_written"]
+            tot_rt += s["read_time"]
+            tot_wt += s["write_time"]
+        out["bytes_read"] = tot_r
+        out["bytes_written"] = tot_w
+        out["read_gbps"] = tot_r / max(tot_rt, 1e-9) / 1e9
+        out["write_gbps"] = tot_w / max(tot_wt, 1e-9) / 1e9
+        out["pinned_peak_bytes"] = self._pool.peak_outstanding
+        return out

@@ -1,34 +1,48 @@
 """Infinity offload engine (paper Secs. 5.1.1, 5.2.2, 6.3).
 
 Three tiers: device HBM, pinned host DRAM, NVMe. The in-graph host tier is
-handled by the engine via ``memory_kind`` shardings; this module implements
-the *out-of-graph* NVMe tier — the DeepNVMe analogue:
+handled by the engines via ``memory_kind`` shardings; this module implements
+the *out-of-graph* tiers — the DeepNVMe analogue:
 
   * ``PinnedBufferPool`` — a fixed, reused budget of host buffers (paper:
     "manages the limited supply of pinned memory by reusing a small amount
-    ... preventing memory fragmentation").
-  * ``NvmeStore`` — file-backed array store with asynchronous bulk
-    read/write on worker threads and explicit flush (DeepNVMe's async
-    request + synchronization API), with measured bandwidth counters.
-  * ``ChunkedAdamOffload`` — the NVMe-tier optimizer step: optimizer states
-    stream NVMe -> host in chunks; chunk k+1's read overlaps chunk k's
+    ... preventing memory fragmentation"). One pool is shared by every
+    store of an executor, so the budget bounds *total* staging memory.
+  * ``ArrayStore`` — the async key->array store interface with measured
+    bandwidth counters (cumulative for run summaries, ``mark``/
+    ``delta_since`` for per-step metrics). Two implementations:
+      - ``HostArrayStore``: arrays resident in host DRAM (the pinned-host
+        tier for states that never re-enter the graph);
+      - ``NvmeStore``: file-backed with asynchronous bulk read/write on
+        worker threads and explicit flush (DeepNVMe's async request +
+        synchronization API). Key metadata persists in sidecar files, so a
+        store reopened on the same directory serves every flushed key.
+  * ``ChunkedAdamOffload`` — the slow-tier optimizer step: optimizer states
+    stream store -> host in chunks; chunk k+1's read overlaps chunk k's
     CPU update overlaps chunk k-1's write-back (paper Sec. 5.2.2's
     read/update/write pipeline). The CPU update is vectorized numpy — the
     TPU-host analogue of DeepSpeed's CPU-Adam.
+  * ``ParamStreamer`` — slow-tier resident bf16 parameters: each rank's
+    (L, P/dp) flat shard is stored as per-layer rows and streamed back with
+    a bounded read-ahead window ahead of the step's all-gathers (paper
+    Sec. 6.2's prefetch, applied to the NVMe->host leg).
 
 On real TPU VMs the file I/O slot is implemented by tensorstore/OCDBT; the
 ``ArrayStore`` interface isolates that swap.
 """
 from __future__ import annotations
 
+import collections
+import hashlib
+import json
 import math
 import os
-import queue
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, Iterator, List, Optional, Tuple
 
+import ml_dtypes  # noqa: F401  (registers bfloat16 & friends with numpy)
 import numpy as np
 
 DEFAULT_CHUNK_ELEMS = 1 << 22  # 4M elements per pipeline chunk
@@ -74,60 +88,77 @@ class PinnedBufferPool:
             self._lock.notify_all()
 
 
-class NvmeStore:
-    """Async file-backed array store (DeepNVMe analogue).
+class ArrayStore:
+    """Async key->array store with bandwidth accounting (DeepNVMe analogue).
 
-    write(key, arr) / read(key) return futures; flush() synchronizes.
-    Bandwidth counters support the paper's Fig. 5b/6c-style measurements.
+    write(key, arr) / read(key) return futures; flush() synchronizes writes.
+    Counters are cumulative over the store's lifetime (``bandwidth_stats``,
+    for run summaries); per-step deltas come from ``mark()`` +
+    ``delta_since(mark)`` so step metrics report *per-step* throughput, not
+    cumulative bytes (paper Fig. 5b/6c-style measurements).
     """
 
-    def __init__(self, directory: str, pool_mb: int = 64, workers: int = 2,
-                 overlap: bool = True):
-        self.dir = directory
-        os.makedirs(directory, exist_ok=True)
-        self.pool = PinnedBufferPool(pool_mb << 20)
+    kind = "abstract"
+
+    def __init__(self, pool: Optional[PinnedBufferPool] = None, pool_mb: int = 64,
+                 workers: int = 2, overlap: bool = True):
+        self.pool = pool if pool is not None else PinnedBufferPool(pool_mb << 20)
         self.overlap = overlap
         self._pool_exec = ThreadPoolExecutor(max_workers=workers) if overlap else None
-        self._meta: Dict[str, Tuple[tuple, str]] = {}
+        self._stat_lock = threading.Lock()
         self.bytes_read = 0
         self.bytes_written = 0
         self.read_time = 0.0
         self.write_time = 0.0
         self._pending: List[Future] = []
 
-    def _path(self, key: str) -> str:
-        return os.path.join(self.dir, key.replace("/", "_") + ".bin")
+    # -- accounting ---------------------------------------------------------
 
-    # -- core sync ops (run on worker threads when overlap=True) ----------
+    def _count_read(self, nbytes: int, dt: float) -> None:
+        with self._stat_lock:
+            self.bytes_read += nbytes
+            self.read_time += dt
+
+    def _count_write(self, nbytes: int, dt: float) -> None:
+        with self._stat_lock:
+            self.bytes_written += nbytes
+            self.write_time += dt
+
+    def bandwidth_stats(self) -> dict:
+        with self._stat_lock:
+            return {
+                "read_gbps": self.bytes_read / max(self.read_time, 1e-9) / 1e9,
+                "write_gbps": self.bytes_written / max(self.write_time, 1e-9) / 1e9,
+                "bytes_read": self.bytes_read,
+                "bytes_written": self.bytes_written,
+                "read_time": self.read_time,
+                "write_time": self.write_time,
+                "pinned_peak_bytes": self.pool.peak_outstanding,
+            }
+
+    def mark(self) -> dict:
+        """Counter snapshot; pass to ``delta_since`` for per-step stats."""
+        with self._stat_lock:
+            return {"bytes_read": self.bytes_read, "bytes_written": self.bytes_written,
+                    "read_time": self.read_time, "write_time": self.write_time}
+
+    def delta_since(self, mark: dict) -> dict:
+        with self._stat_lock:
+            br = self.bytes_read - mark["bytes_read"]
+            bw = self.bytes_written - mark["bytes_written"]
+            rt = self.read_time - mark["read_time"]
+            wt = self.write_time - mark["write_time"]
+        return {"bytes_read": br, "bytes_written": bw,
+                "read_gbps": br / max(rt, 1e-9) / 1e9,
+                "write_gbps": bw / max(wt, 1e-9) / 1e9}
+
+    # -- sync backends (implemented by subclasses) --------------------------
 
     def _write_sync(self, key: str, arr: np.ndarray) -> None:
-        t0 = time.perf_counter()
-        buf = self.pool.acquire(arr.nbytes)
-        staged = buf[: arr.nbytes].view(arr.dtype.str).reshape(arr.shape)
-        np.copyto(staged, arr)  # host staging copy through the pinned pool
-        tmp = self._path(key) + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(staged.tobytes())
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, self._path(key))
-        self.pool.release(buf)
-        self._meta[key] = (arr.shape, arr.dtype.str)
-        self.bytes_written += arr.nbytes
-        self.write_time += time.perf_counter() - t0
+        raise NotImplementedError
 
     def _read_sync(self, key: str) -> np.ndarray:
-        t0 = time.perf_counter()
-        shape, dtype = self._meta[key]
-        nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize if shape else np.dtype(dtype).itemsize
-        buf = self.pool.acquire(max(nbytes, 1))
-        with open(self._path(key), "rb") as f:
-            data = f.read()
-        out = np.frombuffer(data, dtype=dtype).reshape(shape).copy()
-        self.pool.release(buf)
-        self.bytes_read += nbytes
-        self.read_time += time.perf_counter() - t0
-        return out
+        raise NotImplementedError
 
     # -- async API ----------------------------------------------------------
 
@@ -147,22 +178,169 @@ class NvmeStore:
             return f
         return self._pool_exec.submit(self._read_sync, key)
 
+    def roundtrip(self, key: str, arr: np.ndarray) -> Future:
+        """Drain ``arr`` into the store and resolve to the store-resident
+        copy: an ordered write-then-read on one worker, so the caller can
+        hold the future and let later drains overlap earlier consumers
+        (the grad-tier leg of the overlap-centric schedule)."""
+        arr = np.asarray(arr)
+        if not self.overlap:
+            f: Future = Future()
+            self._write_sync(key, arr)
+            f.set_result(self._read_sync(key))
+            return f
+
+        def _rt():
+            self._write_sync(key, arr)
+            return self._read_sync(key)
+
+        fut = self._pool_exec.submit(_rt)
+        self._pending.append(fut)
+        return fut
+
+    def close(self) -> None:
+        """Synchronize pending writes and stop the worker threads."""
+        self.flush()
+        if self._pool_exec is not None:
+            self._pool_exec.shutdown(wait=True)
+
     def flush(self) -> None:
         for f in self._pending:
             f.result()
         self._pending.clear()
 
     def keys(self):
-        return list(self._meta)
+        raise NotImplementedError
 
-    def bandwidth_stats(self) -> dict:
-        return {
-            "read_gbps": self.bytes_read / max(self.read_time, 1e-9) / 1e9,
-            "write_gbps": self.bytes_written / max(self.write_time, 1e-9) / 1e9,
-            "bytes_read": self.bytes_read,
-            "bytes_written": self.bytes_written,
-            "pinned_peak_bytes": self.pool.peak_outstanding,
-        }
+
+class HostArrayStore(ArrayStore):
+    """Host-DRAM tier: arrays live in (pinned) host memory, staged through
+    the shared buffer pool. Same async interface and counters as the NVMe
+    store, so the optimizer pipeline and streamers run tier-agnostic."""
+
+    kind = "host"
+
+    def __init__(self, pool: Optional[PinnedBufferPool] = None, pool_mb: int = 64,
+                 workers: int = 2, overlap: bool = True):
+        super().__init__(pool=pool, pool_mb=pool_mb, workers=workers, overlap=overlap)
+        self._data: Dict[str, np.ndarray] = {}
+        self._data_lock = threading.Lock()
+
+    def _write_sync(self, key: str, arr: np.ndarray) -> None:
+        t0 = time.perf_counter()
+        buf = self.pool.acquire(max(arr.nbytes, 1))
+        staged = buf[: arr.nbytes].view(np.dtype(arr.dtype)).reshape(arr.shape)
+        np.copyto(staged, arr)  # device->host staging through the pinned pool
+        resident = staged.copy()  # the host-resident copy outlives the buffer
+        self.pool.release(buf)
+        with self._data_lock:
+            self._data[key] = resident
+        self._count_write(arr.nbytes, time.perf_counter() - t0)
+
+    def _read_sync(self, key: str) -> np.ndarray:
+        t0 = time.perf_counter()
+        with self._data_lock:
+            src = self._data[key]
+        out = src.copy()
+        self._count_read(out.nbytes, time.perf_counter() - t0)
+        return out
+
+    def keys(self):
+        with self._data_lock:
+            return list(self._data)
+
+
+def _dtype_name(dtype) -> str:
+    """Round-trippable dtype name ('float32', 'bfloat16', ...) — ml_dtypes
+    extension types stringify to reconstructible names, unlike ``.str``
+    (which collapses bf16 to the opaque void '<V2')."""
+    return str(np.dtype(dtype))
+
+
+class NvmeStore(ArrayStore):
+    """Async file-backed array store (DeepNVMe analogue).
+
+    Filenames are content-addressed from the key (sanitized prefix + hash),
+    so overlapping key namespaces ('a/b' vs 'a_b') never collide on disk.
+    Per-key metadata persists in a ``.meta`` sidecar committed with the data
+    file; reopening a store on the same directory serves all flushed keys.
+    """
+
+    kind = "nvme"
+
+    def __init__(self, directory: str, pool_mb: int = 64, workers: int = 2,
+                 overlap: bool = True, pool: Optional[PinnedBufferPool] = None):
+        super().__init__(pool=pool, pool_mb=pool_mb, workers=workers, overlap=overlap)
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self._meta: Dict[str, Tuple[tuple, str]] = {}
+        self._meta_lock = threading.Lock()
+        self._reopen()
+
+    def _reopen(self) -> None:
+        for name in os.listdir(self.dir):
+            if not name.endswith(".meta"):
+                continue
+            try:
+                with open(os.path.join(self.dir, name)) as f:
+                    rec = json.load(f)
+                self._meta[rec["key"]] = (tuple(rec["shape"]), rec["dtype"])
+            except (OSError, ValueError, KeyError):
+                continue  # partial sidecar from a crash mid-write: skip
+
+    def _fname(self, key: str) -> str:
+        safe = "".join(c if c.isalnum() or c in "._-" else "_" for c in key)[:48]
+        return f"{safe}-{hashlib.md5(key.encode()).hexdigest()[:12]}"
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.dir, self._fname(key) + ".bin")
+
+    def _meta_path(self, key: str) -> str:
+        return os.path.join(self.dir, self._fname(key) + ".meta")
+
+    # -- core sync ops (run on worker threads when overlap=True) ----------
+
+    def _write_sync(self, key: str, arr: np.ndarray) -> None:
+        t0 = time.perf_counter()
+        buf = self.pool.acquire(max(arr.nbytes, 1))
+        staged = buf[: arr.nbytes].view(np.dtype(arr.dtype)).reshape(arr.shape)
+        np.copyto(staged, arr)  # host staging copy through the pinned pool
+        tmp = self._path(key) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(staged.tobytes())
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._path(key))
+        meta = (tuple(arr.shape), _dtype_name(arr.dtype))
+        with self._meta_lock:
+            meta_stale = self._meta.get(key) != meta
+            self._meta[key] = meta
+        if meta_stale:  # sidecar only on first write / layout change —
+            # steady-state chunk rewrites skip the metadata file entirely
+            mtmp = self._meta_path(key) + ".tmp"
+            with open(mtmp, "w") as f:
+                json.dump({"key": key, "shape": list(arr.shape),
+                           "dtype": meta[1]}, f)
+            os.replace(mtmp, self._meta_path(key))
+        self.pool.release(buf)
+        self._count_write(arr.nbytes, time.perf_counter() - t0)
+
+    def _read_sync(self, key: str) -> np.ndarray:
+        t0 = time.perf_counter()
+        with self._meta_lock:
+            shape, dtype = self._meta[key]
+        nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize if shape else np.dtype(dtype).itemsize
+        buf = self.pool.acquire(max(nbytes, 1))
+        with open(self._path(key), "rb") as f:
+            data = f.read()
+        out = np.frombuffer(data, dtype=np.dtype(dtype)).reshape(shape).copy()
+        self.pool.release(buf)
+        self._count_read(nbytes, time.perf_counter() - t0)
+        return out
+
+    def keys(self):
+        with self._meta_lock:
+            return list(self._meta)
 
 
 def _adam_update_numpy(p, m, v, g, lr, b1, b2, eps, wd, c1, c2):
@@ -178,22 +356,29 @@ def _adam_update_numpy(p, m, v, g, lr, b1, b2, eps, wd, c1, c2):
 
 
 class ChunkedAdamOffload:
-    """NVMe-resident optimizer states with a 3-stage streamed update.
+    """Slow-tier-resident optimizer states with a 3-stage streamed update.
 
-    States are stored as fixed-size chunks. step() runs the software
+    States are stored as fixed-size chunks in any ``ArrayStore`` (NVMe files
+    or host DRAM — the ``opt_tier`` choice). step() runs the software
     pipeline: read(k+1) || update(k) || write(k-1). With overlap disabled the
     stages serialize — that contrast is the paper's Fig. 6d-style benchmark.
+
+    ``last_step_stats`` holds the store-counter *deltas of the latest step*
+    (read/write bytes + GB/s), so callers report per-step throughput rather
+    than cumulative totals.
     """
 
-    def __init__(self, store: NvmeStore, chunk_elems: int = DEFAULT_CHUNK_ELEMS):
+    def __init__(self, store: ArrayStore, chunk_elems: int = DEFAULT_CHUNK_ELEMS):
         self.store = store
         self.chunk = chunk_elems
         self.layout: List[Tuple[str, tuple, int]] = []  # (leaf key, shape, n elems)
         self.step_count = 0
+        self.last_step_stats: dict = {}
 
     # -- initialization -----------------------------------------------------
 
     def init_from_params(self, flat_params: Dict[str, np.ndarray]) -> None:
+        self.layout = []
         for key, p in flat_params.items():
             p32 = np.asarray(p, dtype=np.float32).reshape(-1)
             self.layout.append((key, np.asarray(p).shape, p32.size))
@@ -213,25 +398,38 @@ class ChunkedAdamOffload:
     def step(self, flat_grads: Dict[str, np.ndarray], *, lr: float, beta1: float = 0.9,
              beta2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1
              ) -> Dict[str, np.ndarray]:
-        """Consume fp32 grads per leaf; return updated bf16-able fp32 params."""
+        """Consume fp32 grads per leaf; return updated bf16-able fp32 params.
+
+        Grad leaves may be ndarrays or Futures (a slow-tier grad drain in
+        flight): each leaf resolves only when its first chunk reaches the
+        update stage, so later leaves' drains overlap earlier leaves'
+        read/update/write traffic.
+        """
+        t_mark = self.store.mark()
         self.step_count += 1
         c1 = 1.0 - beta1 ** self.step_count
         c2 = 1.0 - beta2 ** self.step_count
 
-        # Build the global chunk worklist across leaves
-        work = []
-        for key, shape, n in self.layout:
-            g = np.asarray(flat_grads[key], dtype=np.float32).reshape(-1)
-            for ci, off, ln in self._chunks_of(key, n):
-                work.append((key, ci, g[off: off + ln]))
+        # Global chunk worklist across leaves; grads resolve lazily per leaf
+        work = [(key, ci, off, ln)
+                for key, _, n in self.layout
+                for ci, off, ln in self._chunks_of(key, n)]
+        g_cache: Dict[str, np.ndarray] = {}
+
+        def g_slice(key: str, off: int, ln: int) -> np.ndarray:
+            if key not in g_cache:
+                g = flat_grads[key]
+                if hasattr(g, "result"):  # a draining Future
+                    g = g.result()
+                g_cache[key] = np.asarray(g, dtype=np.float32).reshape(-1)
+            return g_cache[key][off: off + ln]
 
         out: Dict[str, np.ndarray] = {
             key: np.empty(n, np.float32) for key, _, n in self.layout
         }
-        offs = {key: 0 for key, _, _ in self.layout}
 
         def read_chunk(item):
-            key, ci, g = item
+            key, ci, _, _ = item
             return (self.store.read(f"{key}.master.{ci}"),
                     self.store.read(f"{key}.m.{ci}"),
                     self.store.read(f"{key}.v.{ci}"))
@@ -239,17 +437,78 @@ class ChunkedAdamOffload:
         # Software pipeline: prefetch next reads while updating current
         pending = read_chunk(work[0]) if work else None
         for i, item in enumerate(work):
-            key, ci, g = item
+            key, ci, off, ln = item
             nxt = read_chunk(work[i + 1]) if i + 1 < len(work) else None
             p, m, v = (f.result() for f in pending)
-            p, m, v = _adam_update_numpy(p, m, v, g, lr, beta1, beta2, eps,
-                                         weight_decay, c1, c2)
-            o = offs[key]
-            out[key][o: o + p.size] = p
-            offs[key] = o + p.size
+            p, m, v = _adam_update_numpy(p, m, v, g_slice(key, off, ln), lr,
+                                         beta1, beta2, eps, weight_decay,
+                                         c1, c2)
+            out[key][off: off + p.size] = p
             self.store.write(f"{key}.master.{ci}", p)  # async write-back
             self.store.write(f"{key}.m.{ci}", m)
             self.store.write(f"{key}.v.{ci}", v)
             pending = nxt
         self.store.flush()
+        self.last_step_stats = self.store.delta_since(t_mark)
         return {key: out[key].reshape(shape) for key, shape, _ in self.layout}
+
+
+class ParamStreamer:
+    """Slow-tier-resident parameters, streamed with a read-ahead window.
+
+    Each named array is stored as a sequence of chunks — per-layer rows for
+    the explicit engine's (L, P/dp) rank shards (``row_split=True``), whole
+    leaves for the GSPMD engine's parameter pytree. ``load_all`` issues the
+    chunk reads with at most ``read_ahead`` requests in flight (the
+    overlap-centric window; the shared pinned pool supplies backpressure),
+    and ``save_all`` writes chunks back asynchronously.
+    """
+
+    def __init__(self, store: ArrayStore, read_ahead: int = 2):
+        self.store = store
+        self.read_ahead = max(1, read_ahead)
+        # name -> (n_chunks, row_split); chunk i of `name` is f"{name}/c{i}"
+        self._layout: Dict[str, Tuple[int, bool]] = {}
+
+    def seed(self, named: Dict[str, np.ndarray], *, row_split: bool = True) -> None:
+        """(Re)populate the store; rows of 2-D+ arrays become chunks."""
+        self._layout = {}
+        for name, arr in named.items():
+            arr = np.asarray(arr)
+            split = row_split and arr.ndim >= 2 and arr.shape[0] > 1
+            chunks = [arr[i] for i in range(arr.shape[0])] if split else [arr]
+            for i, c in enumerate(chunks):
+                self.store.write(f"{name}/c{i}", c)
+            self._layout[name] = (len(chunks), split)
+        self.store.flush()
+
+    def load_all(self) -> Dict[str, np.ndarray]:
+        """Windowed prefetch of every chunk; returns reassembled arrays."""
+        worklist = [(name, i) for name, (n, _) in self._layout.items()
+                    for i in range(n)]
+        results: Dict[str, List[np.ndarray]] = collections.defaultdict(list)
+        inflight: collections.deque = collections.deque()
+        wi = 0
+        while wi < len(worklist) or inflight:
+            while wi < len(worklist) and len(inflight) < self.read_ahead:
+                name, i = worklist[wi]
+                inflight.append((name, self.store.read(f"{name}/c{i}")))
+                wi += 1
+            name, fut = inflight.popleft()
+            results[name].append(fut.result())
+        out = {}
+        for name, (n, split) in self._layout.items():
+            out[name] = np.stack(results[name]) if split else results[name][0]
+        return out
+
+    def save_all(self, named: Dict[str, np.ndarray]) -> None:
+        """Asynchronous write-back; ``store.flush()`` commits."""
+        for name, arr in named.items():
+            n, split = self._layout[name]
+            arr = np.asarray(arr)
+            if split:
+                for i in range(n):
+                    self.store.write(f"{name}/c{i}", arr[i])
+            else:
+                self.store.write(f"{name}/c0", arr)
+        self.store.flush()

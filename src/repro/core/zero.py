@@ -62,17 +62,21 @@ class _FlatLayout:
 class ExplicitZero3Engine:
     """Paper-faithful engine with full three-tier (Infinity) placement.
 
-    The optimizer tier is selected by ``run.offload.opt_tier``:
+    Every model-state class has its own tier knob in ``run.offload``:
 
-      * ``device`` — master/m/v live in HBM as local (L, P/dp) shards; the
-        partitioned Adam update runs in-graph.
-      * ``host``   — same layout, placed with the backend's host memory kind
-        (``pinned_host``); the step streams them HBM<->host around the
-        compute. On backends without a distinct host tier (CPU) this
-        degrades to device placement, so the code path stays identical.
-      * ``nvme``   — master/m/v never enter the graph: the step computes the
-        reduce-scattered grad shards only, and the executor
-        (``core/executor.py``) streams the states through ``NvmeStore`` with
+      * ``opt_tier=device`` — master/m/v live in HBM as local (L, P/dp)
+        shards; the partitioned Adam update runs in-graph.
+      * ``opt_tier=host``   — same layout, placed with the backend's host
+        memory kind (``pinned_host``); the step streams them HBM<->host
+        around the compute. On backends without a distinct host tier (CPU)
+        this degrades to device placement, so the code path stays identical.
+      * ``param_tier=host`` — the bf16 (L, P/dp) compute shards live in
+        pinned host memory and are streamed to HBM ahead of the prefetched
+        per-layer all-gathers (same degrade rule on CPU).
+      * NVMe tiers / slow-tier gradients (``opt_offgraph``) — those states
+        never enter the graph: the step computes the reduce-scattered grad
+        shards only, and the executor (``core/executor.py``) streams params,
+        grads, and optimizer states through its ``ArrayStore`` tiers with
         the read(k+1) || update(k) || write(k-1) pipeline.
     """
 
@@ -88,9 +92,12 @@ class ExplicitZero3Engine:
         self.block_fn = transformer.make_block_fn(run.model, self.rules, run.parallel)
         self.defs = transformer.param_defs(run.model)
         self.opt_tier = run.offload.opt_tier
-        self.host_kind = (compat.host_memory_kind()
-                          if self.opt_tier == "host" and compat.host_offload_supported()
-                          else None)
+        self.offgraph = run.offload.opt_offgraph
+        hk = (compat.host_memory_kind()
+              if compat.host_offload_supported() else None)
+        self.opt_host_kind = (hk if self.opt_tier == "host" and not self.offgraph
+                              else None)
+        self.param_host_kind = hk if run.offload.param_tier == "host" else None
         self._build_layout()
 
     # ------------------------------------------------------------------
@@ -142,7 +149,7 @@ class ExplicitZero3Engine:
             "other_opt": adam_mod.init_state(other),
             "step": jnp.zeros((), jnp.int32),
         }
-        if self.opt_tier != "nvme":  # nvme: master/m/v live in the NvmeStore
+        if not self.offgraph:  # offgraph: master/m/v live in the ArrayStore
             flat32 = flat.astype(jnp.float32)
             state.update(master=flat32, m=jnp.zeros_like(flat32),
                          v=jnp.zeros_like(flat32))
@@ -173,15 +180,18 @@ class ExplicitZero3Engine:
             jax.tree.map(lambda _: sh(P()), other),
             jax.tree.map(lambda _: sh(P()), other),
             jax.tree.map(lambda _: sh(P()), other))
+        flat_sh = sh(flat_spec)
+        if self.param_host_kind:  # bf16 compute shards resident in host DRAM
+            flat_sh = flat_sh.with_memory_kind(self.param_host_kind)
         out = {
-            "flat": sh(flat_spec),
+            "flat": flat_sh,
             "other": other, "other_opt": other_opt,
             "step": sh(P()),
         }
-        if self.opt_tier != "nvme":
+        if not self.offgraph:
             opt_sh = sh(flat_spec)
-            if self.host_kind:  # optimizer states resident in pinned host DRAM
-                opt_sh = opt_sh.with_memory_kind(self.host_kind)
+            if self.opt_host_kind:  # optimizer states resident in pinned host DRAM
+                opt_sh = opt_sh.with_memory_kind(self.opt_host_kind)
             out.update(master=opt_sh, m=opt_sh, v=opt_sh)
         return out
 
@@ -214,15 +224,16 @@ class ExplicitZero3Engine:
     def make_train_step(self, *, grads_only: bool = None):
         """Build the sharded step.
 
-        ``grads_only=None`` (default) resolves from the configured optimizer
-        tier: the NVMe tier computes grad shards in-graph and leaves the
-        Adam update to the host-side pipeline (see ``InfinityExecutor``);
-        device/host tiers run partitioned Adam in-graph. The grads-only step
-        still advances ``step`` and the small replicated 'other' params so
-        only the flat (L, P/dp) shards are deferred to the executor.
+        ``grads_only=None`` (default) resolves from the configured tiers:
+        out-of-graph placements (NVMe optimizer states, slow-tier gradient
+        drains) compute grad shards in-graph and leave the Adam update to
+        the host-side pipeline (see ``InfinityExecutor``); in-graph tiers
+        run partitioned Adam inside the step. The grads-only step still
+        advances ``step`` and the small replicated 'other' params so only
+        the flat (L, P/dp) shards are deferred to the executor.
         """
         if grads_only is None:
-            grads_only = self.opt_tier == "nvme"
+            grads_only = self.offgraph
         run = self.run
         cfg = run.model
         tc = run.train
@@ -367,24 +378,34 @@ class ExplicitZero3Engine:
             out_specs=out_specs,
             check_vma=False,
         )
-        if grads_only or not self.host_kind:
+        # Host tiers: params and/or optimizer states resident in pinned host
+        # DRAM are streamed to HBM ahead of the sharded step (the params
+        # arrive before their per-layer all-gathers) and back after — the
+        # in-graph device_puts lower to async copies XLA can overlap.
+        stream_keys = []
+        if self.param_host_kind:
+            stream_keys.append("flat")
+        if not grads_only and self.opt_host_kind:
+            stream_keys += ["master", "m", "v"]
+        if not stream_keys:
             return step_fn
 
-        # Host tier: optimizer states are resident in pinned host DRAM;
-        # stream them to HBM around the sharded update and back after — the
-        # in-graph device_puts lower to async copies XLA can overlap.
         host_shardings = self.state_shardings()
         dev_kind = compat.default_memory_kind()
 
         def to_kind(state, kind):
             out = dict(state)
-            for k in ("master", "m", "v"):
+            for k in stream_keys:
                 s = host_shardings[k].with_memory_kind(kind) if kind else host_shardings[k]
                 out[k] = jax.device_put(state[k], s)
             return out
 
         def host_tier_step(state, batch):
-            new_state, metrics = step_fn(to_kind(state, dev_kind), batch)
+            res = step_fn(to_kind(state, dev_kind), batch)
+            if grads_only:
+                new_state, g32, metrics = res
+                return to_kind(new_state, None), g32, metrics
+            new_state, metrics = res
             return to_kind(new_state, None), metrics
 
         return host_tier_step
@@ -410,7 +431,7 @@ class ExplicitZero3Engine:
             "other_opt": opt_specs,
             "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=sh(P())),
         }
-        if self.opt_tier != "nvme":
+        if not self.offgraph:
             state.update({k: jax.ShapeDtypeStruct((L, Pl), jnp.float32,
                                                   sharding=shardings[k])
                           for k in ("master", "m", "v")})

@@ -145,7 +145,14 @@ def main() -> None:
     ap.add_argument("--score-dtype", default="float32", choices=["float32", "bfloat16"])
     ap.add_argument("--attn-chunk", type=int, default=256)
     ap.add_argument("--moe-combine-dtype", default="float32", choices=["float32", "bfloat16"])
-    ap.add_argument("--offload", default="device", choices=["device", "host"])
+    ap.add_argument("--offload", default="device", choices=["device", "host", "nvme"],
+                    help="optimizer-state tier (nvme lowers the grads-only step)")
+    ap.add_argument("--offload-param", default="device",
+                    choices=["device", "host", "nvme"],
+                    help="compute-parameter tier for the lowered step")
+    ap.add_argument("--offload-grad", default="device",
+                    choices=["device", "host", "nvme"],
+                    help="gradient-drain tier (host/nvme lower grads-only)")
     ap.add_argument("--tag", default="", help="suffix for the result file")
     args = ap.parse_args()
 
@@ -156,7 +163,8 @@ def main() -> None:
                               remat=args.remat, tiling_factor=args.tiling,
                               pure_dp=args.pure_dp, moe_zero_stage=args.moe_zero_stage,
                               engine=args.engine, prefetch=args.prefetch)
-    offload = OffloadConfig(param_tier="device",
+    offload = OffloadConfig(param_tier=args.offload_param,
+                            grad_tier=args.offload_grad,
                             opt_tier=args.offload)
     overrides = {}
     if args.score_dtype != "float32":

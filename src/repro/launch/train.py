@@ -44,7 +44,13 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="pjit = GSPMD-native; zero3 = explicit collectives")
     ap.add_argument("--zero-stage", type=int, default=3)
     ap.add_argument("--grad-accum", type=int, default=1)
-    ap.add_argument("--offload-opt", default="device", choices=["device", "host", "nvme"])
+    ap.add_argument("--offload-opt", default="device", choices=["device", "host", "nvme"],
+                    help="optimizer-state (fp32 master/m/v) tier")
+    ap.add_argument("--offload-param", default="device", choices=["device", "host", "nvme"],
+                    help="bf16 compute-parameter tier (host = pinned memory_kind, "
+                         "nvme = per-rank flat shards streamed with read-ahead)")
+    ap.add_argument("--offload-grad", default="device", choices=["device", "host", "nvme"],
+                    help="reduce-scattered gradient drain tier")
     ap.add_argument("--nvme-dir", default="/tmp/repro_nvme")
     ap.add_argument("--no-overlap", action="store_true", help="disable NVMe overlap")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
@@ -61,7 +67,8 @@ def make_run(args) -> RunConfig:
         model=cfg,
         parallel=make_parallel(args.engine, zero_stage=args.zero_stage,
                                grad_accum=args.grad_accum),
-        offload=make_offload(args.offload_opt, nvme_dir=args.nvme_dir,
+        offload=make_offload(args.offload_opt, param_tier=args.offload_param,
+                             grad_tier=args.offload_grad, nvme_dir=args.nvme_dir,
                              overlap=not args.no_overlap),
         train=TrainConfig(lr=args.lr, steps=args.steps, checkpoint_dir=args.ckpt_dir,
                           checkpoint_every=args.ckpt_every, seed=args.seed),
@@ -81,15 +88,28 @@ def train(args) -> dict:
     history = {"losses": [], "restarts": 0}
 
     def run_once():
-        state = executor.init_state(jax.random.PRNGKey(run.train.seed))
+        resuming = args.resume == "auto" and ckpt.latest_step() is not None
+        # a resume re-seeds the slow-tier stores from the restored state, so
+        # skip the (full-model-write) seeding from the throwaway random init
+        state = executor.init_state(jax.random.PRNGKey(run.train.seed),
+                                    seed_stores=not resuming)
         start_step = 0
-        if args.resume == "auto" and ckpt.latest_step() is not None:
-            state, extra = ckpt.restore(state, shardings=None)
-            # elastic restore: checkpoints hold logical layouts — place them
-            # back onto this mesh's shardings (any dp degree)
-            state = jax.device_put(state, executor.state_shardings())
-            start_step = extra["next_step"]
-            executor.reseed(state, step=start_step)
+        if resuming:
+            try:
+                restored, extra = ckpt.restore(state, shardings=None)
+            except KeyError:
+                # tier migration: the checkpoint was written under a
+                # different offload config — restore the tier-independent
+                # leaves and rebuild this tier's state around them
+                portable, extra = ckpt.restore(executor.portable_state(state))
+                start_step = extra["next_step"]
+                state = executor.adopt_state(portable, step=start_step)
+            else:
+                # elastic restore: checkpoints hold logical layouts — place
+                # them back onto this mesh's shardings (any dp degree)
+                state = jax.device_put(restored, executor.state_shardings())
+                start_step = extra["next_step"]
+                executor.reseed(state, step=start_step)
             print(f"resumed from checkpoint at step {start_step}")
 
         step_fn = executor.make_train_step()

@@ -1,7 +1,11 @@
-"""Checkpoint manager: atomic commit, async save, GC, bit-exact restore."""
+"""Checkpoint manager: atomic commit, async save, GC, bit-exact restore —
+and tier migration: a state checkpointed under one offload configuration
+restores correctly into an executor configured for a different tier."""
+import dataclasses
 import json
 import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -60,3 +64,117 @@ def test_async_save_overlaps(tmp_path):
     # future resolves and checkpoint is valid
     path = f.result()
     assert os.path.exists(os.path.join(path, "manifest.json"))
+
+
+# ---------------------------------------------------------------------------
+# offload-tier migration through the portable (tier-independent) state view
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_executor_env():
+    from repro import configs
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = dataclasses.replace(configs.smoke("smollm-135m"), n_layers=2)
+    mesh = make_local_mesh(1, 1)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                          cfg.vocab_size)}
+    return cfg, mesh, batch
+
+
+def _make_executor(env, engine, tiers, nvme_dir):
+    from repro.config import RunConfig, TrainConfig, make_offload, make_parallel
+    from repro.core.executor import InfinityExecutor
+
+    cfg, mesh, _ = env
+    param, grad, opt = tiers
+    run = RunConfig(model=cfg, parallel=make_parallel(engine, remat="none"),
+                    offload=make_offload(opt, param_tier=param, grad_tier=grad,
+                                         nvme_dir=str(nvme_dir)),
+                    train=TrainConfig(lr=3e-3, warmup_steps=2))
+    return InfinityExecutor(run, mesh)
+
+
+# source tier covers each placement; targets cover both migration directions
+# (into a richer state — extra opt leaves rebuilt — and into a leaner one)
+MIGRATIONS = [
+    ("zero3", ("device", "device", "device"), ("nvme", "nvme", "nvme")),
+    ("zero3", ("nvme", "nvme", "nvme"), ("device", "device", "device")),
+    ("zero3", ("device", "device", "host"), ("device", "device", "nvme")),
+    ("pjit", ("device", "device", "device"), ("device", "nvme", "nvme")),
+    ("pjit", ("device", "device", "nvme"), ("device", "device", "device")),
+]
+
+
+@pytest.mark.parametrize("engine,src,dst", MIGRATIONS)
+def test_checkpoint_restores_across_tiers(tmp_path, tiny_executor_env, engine,
+                                          src, dst):
+    """Save under tier ``src``, restore into an executor at tier ``dst``:
+    the portable leaves round-trip bit-exactly and training continues (the
+    moments restart at zero — the optimizer-state-free checkpoint
+    contract, identical for every destination tier)."""
+    cfg, mesh, batch = tiny_executor_env
+    ex_src = _make_executor(tiny_executor_env, engine, src, tmp_path / "src")
+    state = ex_src.init_state(jax.random.PRNGKey(0))
+    step = ex_src.make_train_step()
+    for _ in range(2):
+        state, _ = step(state, batch)
+
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=1)
+    mgr.save(2, ex_src.portable_state(state), {"next_step": 2}).result()
+
+    ex_dst = _make_executor(tiny_executor_env, engine, dst, tmp_path / "dst")
+    init_dst = ex_dst.init_state(jax.random.PRNGKey(3))  # different rng
+    restored, extra = mgr.restore(ex_dst.portable_state(init_dst))
+    new_state = ex_dst.adopt_state(restored, step=extra["next_step"])
+
+    # portable leaves survive the migration bit-exactly
+    src_leaves = jax.tree_util.tree_flatten_with_path(
+        ex_src.portable_state(state))[0]
+    dst_leaves = jax.tree_util.tree_flatten_with_path(
+        ex_dst.portable_state(new_state))[0]
+    assert len(src_leaves) == len(dst_leaves)
+    for (ka, va), (kb, vb) in zip(src_leaves, dst_leaves):
+        assert str(ka) == str(kb)
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb),
+                                      err_msg=str(ka))
+
+    # and the destination executor trains from the restored state
+    dstep = ex_dst.make_train_step()
+    new_state, metrics = dstep(new_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_adopted_state_trains_identically_across_destinations(
+        tmp_path, tiny_executor_env):
+    """The SAME checkpoint adopted into two different destination tiers must
+    continue on the same loss trajectory (within streamed-Adam rounding) —
+    tier choice never leaks into the numerics after a migration."""
+    cfg, mesh, batch = tiny_executor_env
+    ex_src = _make_executor(tiny_executor_env, "zero3",
+                            ("device", "device", "device"), tmp_path / "s")
+    state = ex_src.init_state(jax.random.PRNGKey(0))
+    step = ex_src.make_train_step()
+    state, _ = step(state, batch)
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=1)
+    mgr.save(1, ex_src.portable_state(state), {"next_step": 1}).result()
+
+    trajs = {}
+    for name, tiers in [("device", ("device", "device", "device")),
+                        ("nvme", ("nvme", "nvme", "nvme"))]:
+        ex = _make_executor(tiny_executor_env, "zero3", tiers,
+                            tmp_path / f"d_{name}")
+        init = ex.init_state(jax.random.PRNGKey(9))
+        restored, extra = mgr.restore(ex.portable_state(init))
+        st_ = ex.adopt_state(restored, step=extra["next_step"])
+        fn = ex.make_train_step()
+        traj = []
+        for _ in range(2):
+            st_, m = fn(st_, batch)
+            traj.append(float(m["loss"]))
+        trajs[name] = np.asarray(traj)
+    np.testing.assert_allclose(trajs["nvme"], trajs["device"],
+                               rtol=2e-3, atol=2e-3)
