@@ -270,7 +270,9 @@ def train_step_micro() -> None:
 # ---------------------------------------------------------------------------
 
 def executor_micro(engine: str = "pjit", tier: str = "device",
-                   param_tier: str = "device", grad_tier: str = "device") -> None:
+                   param_tier: str = "device", grad_tier: str = "device",
+                   prefetch_layers: int = 0, read_ahead: int = 2,
+                   nvme_workers: int = 2) -> None:
     import jax
     import jax.numpy as jnp
 
@@ -287,7 +289,10 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
                         parallel=make_parallel(engine),
                         offload=make_offload(tier, param_tier=param_tier,
                                              grad_tier=grad_tier,
-                                             nvme_dir=nvme_dir),
+                                             nvme_dir=nvme_dir,
+                                             prefetch_layers=prefetch_layers,
+                                             param_read_ahead=read_ahead,
+                                             nvme_workers=nvme_workers),
                         train=TrainConfig())
         ex = InfinityExecutor(run, mesh)
         state = ex.init_state(jax.random.PRNGKey(0))
@@ -310,6 +315,20 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
                 emit(f"executor/{cell}/step_{k}_bytes", 0.0, int(m[f"{k}_bytes"]))
                 emit(f"executor/{cell}/step_{k}_gbps", 0.0,
                      f"{m[f'{k}_gbps']:.3f}")
+        # layer-scheduler residency. Scope differs by engine: the zero3
+        # layered epoch bounds *device* residency (the never-fully-resident
+        # evidence); the pjit scheduler bounds host *staging* only — its jit
+        # step still assembles every leaf on device.
+        if "peak_resident_param_bytes" in m:
+            emit(f"executor/{cell}/residency_scope", 0.0,
+                 "device_window" if engine == "zero3" else "host_staging")
+            emit(f"executor/{cell}/peak_resident_param_bytes", 0.0,
+                 int(m["peak_resident_param_bytes"]))
+            emit(f"executor/{cell}/param_total_bytes", 0.0,
+                 int(m["param_total_bytes"]))
+            emit(f"executor/{cell}/prefetch_hit_rate", 0.0,
+                 f"{m['prefetch_hit_rate']:.3f}")
+            emit(f"executor/{cell}/evictions", 0.0, int(m["evictions"]))
         for k, v in ex.bandwidth_stats().items():
             emit(f"executor/{cell}/run_{k}", 0.0,
                  f"{v:.3f}" if isinstance(v, float) else v)
@@ -419,13 +438,21 @@ def main() -> None:
     ap.add_argument("--offload-grad", default="device",
                     choices=["device", "host", "nvme"],
                     help="gradient-drain tier for the `executor` bench")
+    ap.add_argument("--prefetch-layers", type=int, default=0,
+                    help="layer-scheduler window (0 = bandwidth-aware auto)")
+    ap.add_argument("--read-ahead", type=int, default=2,
+                    help="slow-tier param reads in flight beyond the window")
+    ap.add_argument("--nvme-workers", type=int, default=2,
+                    help="worker threads per slow-tier store")
     args = ap.parse_args()
     keys = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for k in keys:
         if k == "executor":
             executor_micro(args.engine, args.offload,
-                           args.offload_param, args.offload_grad)
+                           args.offload_param, args.offload_grad,
+                           args.prefetch_layers, args.read_ahead,
+                           args.nvme_workers)
         else:
             BENCHES[k]()
 

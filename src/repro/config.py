@@ -126,13 +126,18 @@ class OffloadConfig:
     nvme_dir: str = "/tmp/repro_nvme"
     pinned_buffer_mb: int = 64  # shared pinned buffer-pool budget (all stores)
     overlap: bool = True  # async prefetch/writeback threads
-    param_read_ahead: int = 2  # NVMe param tier: layers of read-ahead window
+    param_read_ahead: int = 2  # slow-tier param reads in flight beyond the window
+    prefetch_layers: int = 0  # layered-epoch window; 0 = bandwidth-aware auto
+    # (schedule.default_prefetch_layers from the paper's Sec. 3-4 model)
+    nvme_workers: int = 2  # worker threads per slow-tier store
 
     def __post_init__(self):
         for t in (self.param_tier, self.grad_tier, self.opt_tier):
             assert t in ("device", "host", "nvme"), t
         assert self.act_tier in ("device", "host")
         assert self.param_read_ahead >= 1
+        assert self.prefetch_layers >= 0
+        assert self.nvme_workers >= 1
 
     @property
     def opt_offgraph(self) -> bool:
@@ -141,6 +146,8 @@ class OffloadConfig:
         True when optimizer states live on NVMe (they never enter the graph)
         or when gradients drain to a slow tier (the update must consume them
         host-side after the drain). The jitted step is then grads-only.
+        Engine-dependent promotion (the explicit engine's layered epoch also
+        forces the update off-graph) lives in ``RunConfig.opt_offgraph``.
         """
         return self.opt_tier == "nvme" or self.grad_tier != "device"
 
@@ -210,6 +217,18 @@ class RunConfig:
     parallel: ParallelConfig = ParallelConfig()
     offload: OffloadConfig = OffloadConfig()
     train: TrainConfig = TrainConfig()
+
+    @property
+    def opt_offgraph(self) -> bool:
+        """Engine-aware off-graph resolution: slow-tier optimizer states or
+        gradient drains always force it; NVMe-resident *params* force it
+        only on the explicit engine, whose layered epoch never assembles the
+        flat shards an in-graph update would need. The GSPMD engine still
+        assembles params for its jitted step, so its in-graph Adam (and the
+        optimizer state it checkpoints) stays viable there.
+        """
+        return self.offload.opt_offgraph or (
+            self.offload.param_tier == "nvme" and self.parallel.engine == "zero3")
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)

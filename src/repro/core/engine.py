@@ -15,6 +15,12 @@ Offload tiers:
   * "nvme"    — optimizer states live in the NvmeStore; the jit step computes
                 grads only and the host loop runs the chunked, overlapped
                 optimizer step (see core/offload.py + launch/train.py).
+                NVMe-resident *params* are streamed per-leaf through the
+                layer scheduler (core/schedule.py): the executor prefetches
+                each leaf inside a bounded window, device_puts it as it
+                lands, and evicts the host staging copy immediately; the
+                in-graph optimizer update stays viable (params are fully
+                assembled for the jit step on this engine).
 """
 from __future__ import annotations
 
@@ -84,13 +90,13 @@ class ZeroInfinityEngine:
                                     self._tier_kind(self.run.offload.opt_tier))
 
     def state_specs(self):
-        if self.run.offload.opt_offgraph:
+        if self.run.opt_offgraph:
             return {"params": self.param_specs()}
         return {"params": self.param_specs(), "opt": self._opt_state_from(self.opt_specs())}
 
     def state_shardings(self):
         """Sharding tree matching ``init_state`` (EngineProtocol)."""
-        if self.run.offload.opt_offgraph:
+        if self.run.opt_offgraph:
             return {"params": self.param_shardings()}
         return {"params": self.param_shardings(),
                 "opt": self._opt_state_from(self.opt_shardings())}
@@ -139,7 +145,7 @@ class ZeroInfinityEngine:
 
         with compat.set_mesh(self.mesh):
             params = jax.jit(_init, out_shardings=shardings)(rng)
-            if self.run.offload.opt_offgraph:
+            if self.run.opt_offgraph:
                 # master/m/v never enter device memory: they live in the
                 # executor's ArrayStore (seeded from these params)
                 return {"params": params}
@@ -217,7 +223,7 @@ class ZeroInfinityEngine:
     def lower_train(self, shape: ShapeConfig, *, grads_only: Optional[bool] = None,
                     donate: bool = True):
         if grads_only is None:  # resolve from the configured tiers
-            grads_only = self.run.offload.opt_offgraph
+            grads_only = self.run.opt_offgraph
         step = self.make_train_step(grads_only=grads_only)
         state_specs = self.state_specs()
         batch = self.batch_specs(shape)

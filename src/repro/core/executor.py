@@ -23,10 +23,18 @@ configured placement, independently per state class
     grads; gradients drain into the grad store, and master/m/v stream
     through the opt store with ``ChunkedAdamOffload``'s
     read(k+1) || update(k) || write(k-1) pipeline.
-  * ``param_tier="nvme"`` — bf16 params are slow-tier resident: each rank's
-    (L, P/dp) flat shard (explicit engine; the paper's per-worker NVMe
-    partition) or each parameter leaf (GSPMD engine) round-trips through
-    the param store via ``ParamStreamer``'s read-ahead window.
+  * ``param_tier="nvme"`` — bf16 params are slow-tier resident and the
+    *layer scheduler* (``core/schedule.py``) owns the step's movement. On
+    the explicit engine the monolithic step is replaced by a layered epoch:
+    each rank's per-layer row (the paper's per-worker NVMe partition, keyed
+    ``rank<r>/c<layer>``) is prefetched inside a bounded window, materialized
+    just-in-time for its gather, and evicted immediately after use — forward
+    order, then reversed for the backward — so peak device residency of the
+    flat params is O(window), not O(L), and the carried ``flat`` leaf is
+    dropped between steps. The GSPMD engine streams its parameter leaves
+    through the same scheduler (per-leaf window) before each jitted step.
+    Scheduler step metrics: ``peak_resident_param_bytes``,
+    ``prefetch_hit_rate``, ``evictions``.
 
 Every store shares one ``PinnedBufferPool`` (the paper's fixed pinned-
 memory supply), and per-step metrics surface per-tier bandwidth counters:
@@ -46,6 +54,7 @@ import numpy as np
 
 from repro import compat
 from repro.config import RunConfig, ShapeConfig
+from repro.core import schedule as sched_mod
 from repro.core.engine import ZeroInfinityEngine
 from repro.core.offload import (ArrayStore, ChunkedAdamOffload, HostArrayStore,
                                 NvmeStore, ParamStreamer, PinnedBufferPool)
@@ -100,9 +109,22 @@ class InfinityExecutor:
         self.engine = engine if engine is not None else make_engine(run, mesh)
         self.is_explicit = isinstance(self.engine, ExplicitZero3Engine)
         off = run.offload
-        self.offgraph = off.opt_offgraph
+        self.offgraph = run.opt_offgraph
         self.param_nvme = off.param_tier == "nvme"
         self.grad_offload = off.grad_tier != "device"
+        # layered epoch: the explicit engine's rows iterate through the
+        # scheduler's window instead of ever assembling the (L, P) flat
+        self.layered = self.is_explicit and self.param_nvme
+        if self.layered and run.parallel.partition_mode != "allgather":
+            # fail at construction, not mid-training: the layered epoch
+            # assumes the bandwidth-centric row layout (every rank holds a
+            # slice of every layer); the broadcast baseline stores whole
+            # layers per owner rank and has no per-rank row to stream
+            raise ValueError(
+                "param_tier='nvme' on the explicit engine requires "
+                "partition_mode='allgather' (the layer scheduler streams "
+                "per-rank rows); broadcast is the non-scaling contrast "
+                "baseline — keep params on the device/host tier for it")
         # shared pinned staging budget across all of this executor's stores
         self._pool = PinnedBufferPool(off.pinned_buffer_mb << 20)
         self.opt_store: Optional[ArrayStore] = None
@@ -113,6 +135,17 @@ class InfinityExecutor:
         self._rank_of = {d: r for r, d in enumerate(np.asarray(mesh.devices).flat)}
         self._step_fn = None
         self._param_shardings_cache = None
+        self._param_shard_by_name = None
+        # scheduler state (param_tier=nvme): working-set accounting shared by
+        # both engines' streaming paths; plan/prefetcher built lazily (the
+        # bandwidth-aware default window needs the batch token count)
+        self._ws = sched_mod.WorkingSetManager()
+        self._sched: Optional[sched_mod.LayerSchedule] = None
+        self._pe: Optional[sched_mod.PrefetchEngine] = None
+        self._pe_stream: Optional[ParamStreamer] = None
+        self._sched_tokens: Optional[int] = None
+        self._layer_fns = None
+        self._param_template = None  # struct tree for dropped carried leaves
 
     # ------------------------------------------------------------------
     # state
@@ -121,28 +154,38 @@ class InfinityExecutor:
     def init_state(self, rng: jax.Array, *, seed_stores: bool = True):
         """Engine init + slow-tier store seeding. Pass ``seed_stores=False``
         when a checkpoint restore (which re-seeds from the restored state)
-        immediately follows — it skips a throwaway full-model store write."""
+        immediately follows — it skips a throwaway full-model store write.
+        With slow-tier-resident params and ``seed_stores=True`` the returned
+        state carries placeholder structs for the param leaves (the store is
+        authoritative; the device never holds the assembled copy)."""
         state = self.engine.init_state(rng)
         if seed_stores:
-            self.reseed(state)
+            state = self.reseed(state)
         return state
 
     def _make_store(self, tier: str, name: str) -> ArrayStore:
         """Slow-tier store for one state class; NVMe stores get their own
         subdirectory (key namespaces never collide across classes) and all
-        stores share the executor's pinned pool."""
+        stores share the executor's pinned pool and worker-thread count."""
         off = self.run.offload
         if tier == "nvme":
             return NvmeStore(os.path.join(off.nvme_dir, name), pool=self._pool,
-                             overlap=off.overlap)
-        return HostArrayStore(pool=self._pool, overlap=off.overlap)
+                             overlap=off.overlap, workers=off.nvme_workers)
+        return HostArrayStore(pool=self._pool, overlap=off.overlap,
+                              workers=off.nvme_workers)
 
-    def reseed(self, state, step: int = 0) -> None:
+    def reseed(self, state, step: int = 0):
         """(Re)populate the slow-tier stores from ``state`` — called by
         ``init_state`` and after a checkpoint restore (m/v restart at zero,
-        matching an optimizer-state-free checkpoint)."""
+        matching an optimizer-state-free checkpoint). Returns the carried
+        state: with slow-tier-resident params the param leaves are dropped
+        to placeholder structs (peak resident param bytes stays O(window)
+        between steps, not O(L))."""
         off = self.run.offload
         if self.is_explicit and (self.offgraph or self.param_nvme):
+            assert not isinstance(state["flat"], jax.ShapeDtypeStruct), (
+                "reseed needs materialized params; use materialized state "
+                "(portable_state / checkpoint_state) to re-enter")
             # A checkpoint-restored flat may live on one device — re-shard
             # first so the rank partition matches the mesh.
             flat = jax.device_put(state["flat"],
@@ -154,7 +197,16 @@ class InfinityExecutor:
             if self.opt_store is None:
                 self.opt_store = self._make_store(off.opt_tier, "opt")
             self.offload = ChunkedAdamOffload(self.opt_store)
-            if self.is_explicit:
+            if self.layered:
+                # per-layer per-rank key namespaces, inserted in backward
+                # (production) order so the streamed update consumes grads
+                # as the reversed pass emits them
+                rows = self._rank_arrays(flat)
+                self.offload.init_from_params(
+                    {f"rank{r}/l{li}": rows[r][li].astype(np.float32)
+                     for li in range(rows[next(iter(rows))].shape[0] - 1, -1, -1)
+                     for r in sorted(rows)})
+            elif self.is_explicit:
                 # seed per-rank key namespaces with the f32 view of each
                 # rank's (L, P/dp) bf16 shard (exact: bf16 -> f32 is
                 # lossless) — the paper's per-worker slow-tier partition.
@@ -180,6 +232,76 @@ class InfinityExecutor:
                     {k: np.asarray(v) for k, v in
                      _flatten_with_paths(state["params"]).items()},
                     row_split=False)
+            state = self._drop_param_leaves(state)
+        return state
+
+    # ------------------------------------------------------------------
+    # slow-tier-resident param leaves: placeholders + on-demand assembly
+    # ------------------------------------------------------------------
+
+    def _param_placeholder(self):
+        """Struct tree standing in for the dropped param leaves (shape /
+        dtype / sharding preserved so checkpoint templates still match)."""
+        if self._param_template is None:
+            if self.is_explicit:
+                sh = self.engine.state_shardings()["flat"]
+                L, Pl = self.engine.n_layers, self.engine.layout.padded
+                self._param_template = jax.ShapeDtypeStruct(
+                    (L, Pl), jnp.bfloat16, sharding=sh)
+            else:
+                self._param_template = self.engine.param_specs()
+        return self._param_template
+
+    def _drop_param_leaves(self, state):
+        state = dict(state)
+        key = "flat" if self.is_explicit else "params"
+        state[key] = self._param_placeholder()
+        return state
+
+    @staticmethod
+    def _is_dropped(leaf_or_tree) -> bool:
+        leaves = jax.tree.leaves(leaf_or_tree)
+        return bool(leaves) and isinstance(leaves[0], jax.ShapeDtypeStruct)
+
+    @property
+    def total_param_bytes(self) -> int:
+        """Global bytes of the scheduler-managed (windowed) parameters —
+        the denominator of the never-fully-resident claim."""
+        if not self.param_nvme:
+            return 0
+        tpl = self._param_placeholder()
+        return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(tpl))
+
+    def _materialize_flat(self):
+        """Assemble the full (L, P) flat from the param store — checkpoint
+        path only; the training step never calls this."""
+        loaded = self.param_stream.load_all()
+        return self._flat_from_ranks(
+            {int(k[len("rank"):]): v for k, v in loaded.items()},
+            like=self._param_placeholder())
+
+    def _materialize_params(self, like_tree):
+        """GSPMD engine: assemble the parameter pytree from the store."""
+        loaded = self.param_stream.load_all()
+        if self._param_shardings_cache is None:
+            self._param_shardings_cache = self.engine.state_shardings()["params"]
+            self._param_shard_by_name = _flatten_with_paths(
+                self._param_shardings_cache)
+        return jax.device_put(_unflatten_like(like_tree, loaded),
+                              self._param_shardings_cache)
+
+    def checkpoint_state(self, state) -> dict:
+        """``state`` with any dropped param leaves materialized from the
+        store — what the full-state checkpoint path should persist."""
+        if not self.param_nvme:
+            return state
+        state = dict(state)
+        if self.is_explicit and self._is_dropped(state["flat"]):
+            state["flat"] = self._materialize_flat()
+        elif not self.is_explicit and self._is_dropped(state["params"]):
+            state["params"] = self._materialize_params(state["params"])
+        return state
 
     def state_shardings(self):
         return self.engine.state_shardings()
@@ -205,7 +327,10 @@ class InfinityExecutor:
     def portable_state(self, state) -> dict:
         """The tier-independent subtree of ``state`` — the leaves whose
         presence/layout does not depend on the offload configuration, so a
-        checkpoint of it restores into an executor at *any* tier."""
+        checkpoint of it restores into an executor at *any* tier. Dropped
+        slow-tier param leaves are materialized from the store on the way
+        out (a full assembly, but only on the checkpoint path)."""
+        state = self.checkpoint_state(state)
         if self.is_explicit:
             return {k: state[k] for k in ("flat", "other", "other_opt", "step")}
         return {"params": state["params"]}
@@ -238,8 +363,7 @@ class InfinityExecutor:
                 opt = adam_mod.AdamState(jnp.asarray(step, jnp.int32), master,
                                          zeros, zeros)
                 state["opt"] = jax.device_put(opt, shardings["opt"])
-        self.reseed(state, step=step)
-        return state
+        return self.reseed(state, step=step)
 
     # ------------------------------------------------------------------
     # the unified train step
@@ -248,6 +372,11 @@ class InfinityExecutor:
     def make_train_step(self):
         if self._step_fn is not None:
             return self._step_fn
+        if self.layered:
+            # scheduler-driven layered epoch: no monolithic jitted step at
+            # all — per-layer fns iterate rows through the prefetch window
+            self._step_fn = self._layered_step()
+            return self._step_fn
         with compat.set_mesh(self.mesh):
             jit_step = jax.jit(self.engine.make_train_step(grads_only=self.offgraph))
 
@@ -255,11 +384,12 @@ class InfinityExecutor:
             step = jit_step  # fully in-graph (device/host tiers)
         else:
             if not self.offgraph:
-                inner = jit_step  # in-graph update; only params stream
-            elif self.is_explicit:
-                inner = self._explicit_offgraph_step(jit_step)
+                # GSPMD in-graph update; only params stream (scheduler-fed)
+                inner = jit_step
             else:
-                inner = self._gspmd_offgraph_step(jit_step)
+                inner = (self._explicit_offgraph_step(jit_step)
+                         if self.is_explicit
+                         else self._gspmd_offgraph_step(jit_step))
             step = self._instrumented(inner)
         self._step_fn = step
         return step
@@ -281,10 +411,12 @@ class InfinityExecutor:
         def step(state, batch):
             marks = {name: s.mark() for name, s in self._active_stores()}
             if self.param_nvme:
+                self._ws.begin_step()
                 state = self._load_params(state)
             new_state, metrics = inner(state, batch)
             if self.param_nvme:
                 self._save_params(new_state)
+                new_state = self._drop_param_leaves(new_state)
             if self.grad_store is not None:
                 self.grad_store.flush()  # retire this step's drain futures
             return new_state, self._with_tier_metrics(metrics, marks)
@@ -351,38 +483,188 @@ class InfinityExecutor:
                 for k, g in gflat.items()}
 
     # ------------------------------------------------------------------
-    # slow-tier resident parameters
+    # slow-tier resident parameters (scheduler-driven)
     # ------------------------------------------------------------------
 
+    def _ensure_row_scheduler(self, batch):
+        """Plan + prefetcher over the explicit engine's per-layer rows.
+        Rebuilt whenever ``reseed`` swapped the underlying streamer or — for
+        the bandwidth-aware auto window (``prefetch_layers=0``, the paper's
+        Sec. 3-4 model) — whenever the batch token count changes."""
+        off = self.run.offload
+        tokens = int(np.prod(batch["tokens"].shape))
+        stale = (self._sched is None or self._pe_stream is not self.param_stream
+                 or (not off.prefetch_layers and tokens != self._sched_tokens))
+        if stale:
+            L = self.engine.n_layers
+            window = off.prefetch_layers
+            if not window:
+                window = sched_mod.default_prefetch_layers(
+                    L, self.engine.layout.padded, tokens)
+            self._sched_tokens = tokens
+            ranks = sorted(self._rank_of.values())
+            stream = self.param_stream
+
+            def fetch(layer):
+                return [stream.read_row(f"rank{r}", layer) for r in ranks]
+
+            self._sched = sched_mod.LayerSchedule(
+                L, window, read_ahead=off.param_read_ahead)
+            self._pe = sched_mod.PrefetchEngine(fetch, self._ws)
+            self._pe_stream = stream
+        return self._sched, self._pe
+
+    def _ensure_leaf_scheduler(self):
+        """GSPMD engine: the same scheduler over whole parameter leaves —
+        at most ``window`` leaves staged in host memory at once while the
+        rest are still in flight or already handed to the device."""
+        if self._sched is None or self._pe_stream is not self.param_stream:
+            off = self.run.offload
+            names = self.param_stream.names()
+            window = off.prefetch_layers or max(2, off.param_read_ahead)
+            stream = self.param_stream
+
+            def fetch(i):
+                return [stream.read_row(names[i], 0)]
+
+            self._sched = sched_mod.LayerSchedule(
+                len(names), window, read_ahead=off.param_read_ahead)
+            self._pe = sched_mod.PrefetchEngine(fetch, self._ws)
+            self._pe_stream = stream
+        return self.param_stream.names(), self._sched, self._pe
+
     def _load_params(self, state):
-        """Materialize params from the param store (read-ahead window) —
-        the store copy, not the carried state leaf, feeds the step."""
-        loaded = self.param_stream.load_all()
-        state = dict(state)
-        if self.is_explicit:
-            like = state["flat"]
-            state["flat"] = self._flat_from_ranks(
-                {self._rank_of[s.device]:
-                 loaded[f"rank{self._rank_of[s.device]}"]
-                 for s in like.addressable_shards}, like=like)
-        else:
-            if self._param_shardings_cache is None:  # one tree walk, cached
-                self._param_shardings_cache = self.engine.state_shardings()["params"]
-            state["params"] = jax.device_put(
-                _unflatten_like(state["params"], loaded),
+        """Materialize params from the param store through the scheduler —
+        per-leaf prefetch window, each leaf device_put as it lands and its
+        host staging copy evicted immediately (the store copy, not the
+        carried state leaf, feeds the step)."""
+        names, sched, pe = self._ensure_leaf_scheduler()
+        if self._param_shardings_cache is None:  # one tree walk, cached
+            self._param_shardings_cache = self.engine.state_shardings()["params"]
+            self._param_shard_by_name = _flatten_with_paths(
                 self._param_shardings_cache)
+        shard_by_name = self._param_shard_by_name
+        host: Dict[int, np.ndarray] = {}
+        on_device: Dict[str, jax.Array] = {}
+
+        def use(i):
+            name = names[i]
+            on_device[name] = jax.device_put(host[i], shard_by_name[name])
+
+        pe.run_events(sched.forward(),
+                      on_materialize=lambda i, vals: host.__setitem__(i, vals[0]),
+                      on_use=use,
+                      on_evict=lambda i: host.pop(i, None))
+        state = dict(state)
+        leaves, _ = jax.tree_util.tree_flatten_with_path(state["params"])
+        state["params"] = jax.tree.unflatten(
+            jax.tree.structure(state["params"]),
+            [on_device[jax.tree_util.keystr(path)] for path, _ in leaves])
         return state
 
     def _save_params(self, new_state) -> None:
         """Write the step's updated params back to the param store."""
-        if self.is_explicit:
-            self.param_stream.save_all(
-                {f"rank{r}": a for r, a in
-                 self._rank_arrays(new_state["flat"]).items()})
-        else:
-            self.param_stream.save_all(
-                {k: np.asarray(v) for k, v in
-                 _flatten_with_paths(new_state["params"]).items()})
+        self.param_stream.save_all(
+            {k: np.asarray(v) for k, v in
+             _flatten_with_paths(new_state["params"]).items()})
+
+    # ------------------------------------------------------------------
+    # the layered epoch (explicit engine, param_tier=nvme)
+    # ------------------------------------------------------------------
+
+    def _device_row(self, vals, sharding):
+        """Per-rank host rows (rank order) -> global (P,) device row."""
+        devices = list(np.asarray(self.mesh.devices).flat)
+        pieces = [jax.device_put(vals[self._rank_of[d]], d) for d in devices]
+        shape = (sum(int(v.shape[0]) for v in vals),)
+        return jax.make_array_from_single_device_arrays(shape, sharding, pieces)
+
+    def _layered_step(self):
+        """One train step as two scheduler-driven passes over the layers.
+
+        Forward materializes each layer's row just-in-time inside the
+        prefetch window and evicts it right after the layer's compute; the
+        backward pass re-materializes in reverse (the paper's "loaded one
+        additional time" with per-layer recompute), reduce-scatters each
+        layer's gradient shard, and hands it — optionally via the grad-tier
+        drain — to the streamed per-layer Adam, whose updated bf16 rows are
+        written straight back to the store. The full (L, P) flat array is
+        never assembled on device or host, so ``peak_resident_param_bytes``
+        is O(window), not O(L).
+        """
+        eng = self.engine
+        tc = self.run.train
+
+        def step(state, batch):
+            marks = {name: s.mark() for name, s in self._active_stores()}
+            if self._layer_fns is None:
+                self._layer_fns = eng.make_layer_fns()
+            fns = self._layer_fns
+            sched, pe = self._ensure_row_scheduler(batch)
+            self._ws.begin_step()
+            row_sh = eng.layer_row_sharding()
+            rows: Dict[int, jax.Array] = {}
+
+            def run_pass(events, use_fn):
+                pe.run_events(
+                    events,
+                    on_materialize=lambda l, vals: rows.__setitem__(
+                        l, self._device_row(vals, row_sh)),
+                    on_use=use_fn,
+                    # evict: drop the device row the moment use ends
+                    on_evict=lambda l: rows.pop(l, None))
+
+            # ---- forward ----
+            x = fns["embed_fwd"](state["other"], batch["tokens"])
+            acts: Dict[int, jax.Array] = {}
+
+            def fwd_use(layer):
+                nonlocal x
+                acts[layer] = x  # the layer's input (its recompute seed)
+                x = fns["layer_fwd"](x, rows[layer])
+
+            run_pass(sched.forward(), fwd_use)
+
+            # ---- head + reversed layer pass ----
+            loss, dx, g_head = fns["head"](x, state["other"], batch["labels"])
+            gdict: Dict[str, object] = {}
+            sumsq = 0.0
+
+            def bwd_use(layer):
+                nonlocal dx, sumsq
+                dx, g_row = fns["layer_vjp"](acts.pop(layer), rows[layer], dx)
+                for r, g in self._rank_arrays(g_row).items():
+                    sumsq += float(np.sum(np.square(g, dtype=np.float32)))
+                    key = f"rank{r}/l{layer}"
+                    gdict[key] = (self.grad_store.roundtrip(f"{key}/g", g)
+                                  if self.grad_offload else g)
+
+            run_pass(sched.backward(), bwd_use)
+
+            g_emb = fns["embed_vjp"](state["other"], batch["tokens"], dx)
+            new_other, new_other_opt, new_step, fm = fns["finish"](
+                state["other"], state["other_opt"], state["step"],
+                g_head, g_emb, jnp.float32(sumsq))
+
+            # streamed per-layer Adam; updated bf16 rows go straight back
+            new_master = self.offload.step(
+                gdict, lr=float(fm["lr"]), beta1=tc.beta1, beta2=tc.beta2,
+                eps=tc.eps, weight_decay=tc.weight_decay)
+            for key, m32 in new_master.items():
+                rank, layer = key.split("/")  # "rank<r>/l<i>"
+                self.param_stream.write_row(
+                    rank, int(layer[1:]), m32.astype(ml_dtypes.bfloat16))
+            self.param_stream.flush()
+            if self.grad_store is not None:
+                self.grad_store.flush()
+
+            new_state = {"flat": self._param_placeholder(), "other": new_other,
+                         "other_opt": new_other_opt, "step": new_step}
+            metrics = {"loss": loss, "grad_norm": fm["grad_norm"],
+                       "lr": fm["lr"]}
+            return new_state, self._with_tier_metrics(metrics, marks)
+
+        return step
 
     # ------------------------------------------------------------------
     # rank-shard plumbing (explicit engine)
@@ -401,15 +683,15 @@ class InfinityExecutor:
     def _assemble_flat(self, new_master: Dict[str, np.ndarray], *, like):
         """Per-rank f32 masters -> global bf16 flat array sharded like ``like``."""
         return self._flat_from_ranks(
-            {r: new_master[f"rank{r}/flat"] for r in
-             (self._rank_of[s.device] for s in like.addressable_shards)},
-            like=like)
+            {r: new_master[f"rank{r}/flat"]
+             for r in self._rank_of.values()}, like=like)
 
     def _flat_from_ranks(self, by_rank: Dict[int, np.ndarray], *, like):
         """{rank: (L, P/dp) ndarray} -> global bf16 array placed like
-        ``like`` — including its memory kind: the shards are assembled in
-        device memory first, then streamed to a pinned-host target sharding
-        (per-device assembly cannot target a non-default memory kind)."""
+        ``like`` (an array or a ShapeDtypeStruct) — including its memory
+        kind: the shards are assembled in device memory first, then streamed
+        to a pinned-host target sharding (per-device assembly cannot target
+        a non-default memory kind)."""
         sh = like.sharding
         kind = getattr(sh, "memory_kind", None)
         dev_kind = compat.default_memory_kind()
@@ -417,10 +699,10 @@ class InfinityExecutor:
         if kind is not None and dev_kind is not None and kind != dev_kind:
             asm_sh = sh.with_memory_kind(dev_kind)
         pieces = []
-        for s in like.addressable_shards:
-            piece = np.asarray(by_rank[self._rank_of[s.device]]).astype(
+        for d in np.asarray(self.mesh.devices).flat:
+            piece = np.asarray(by_rank[self._rank_of[d]]).astype(
                 ml_dtypes.bfloat16)
-            pieces.append(jax.device_put(piece, s.device))
+            pieces.append(jax.device_put(piece, d))
         arr = jax.make_array_from_single_device_arrays(like.shape, asm_sh, pieces)
         if asm_sh is not sh:
             arr = jax.device_put(arr, sh)
@@ -468,7 +750,11 @@ class InfinityExecutor:
                 nvme["bytes_written"] += d["bytes_written"]
         out["nvme_bytes_read"] = nvme["bytes_read"]
         out["nvme_bytes_written"] = nvme["bytes_written"]
-        out["nvme_pinned_peak_bytes"] = self._pool.peak_outstanding
+        # resident (outstanding + cached) — what the fixed supply bounds
+        out["nvme_pinned_peak_bytes"] = self._pool.peak_resident
+        if self.param_nvme:  # scheduler residency / overlap effectiveness
+            out.update(self._ws.stats())
+            out["param_total_bytes"] = self.total_param_bytes
         return out
 
     def bandwidth_stats(self) -> dict:
@@ -495,5 +781,5 @@ class InfinityExecutor:
         out["bytes_written"] = tot_w
         out["read_gbps"] = tot_r / max(tot_rt, 1e-9) / 1e9
         out["write_gbps"] = tot_w / max(tot_wt, 1e-9) / 1e9
-        out["pinned_peak_bytes"] = self._pool.peak_outstanding
+        out["pinned_peak_bytes"] = self._pool.peak_resident
         return out

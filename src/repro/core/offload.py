@@ -53,6 +53,16 @@ class PinnedBufferPool:
 
     Buffers are recycled by (rounded) size class; acquiring beyond the budget
     blocks until a buffer is released — backpressure instead of fragmentation.
+
+    The budget bounds *resident* pinned bytes — buffers handed out plus
+    buffers cached for reuse. (An earlier version only counted outstanding
+    buffers, so a mix of size classes could cache an unbounded set of free
+    buffers and silently exceed the fixed pinned supply; regression test:
+    ``test_buffer_pool_resident_budget_varied_sizes``.) Cached buffers of
+    other size classes are dropped before a new allocation would overflow.
+    A single request larger than the whole budget is still honoured once no
+    other buffer is outstanding — the pool degrades to direct allocation
+    rather than deadlocking.
     """
 
     def __init__(self, budget_bytes: int):
@@ -60,24 +70,45 @@ class PinnedBufferPool:
         self._lock = threading.Condition()
         self._free: Dict[int, List[np.ndarray]] = {}
         self._outstanding = 0
+        self._resident = 0  # outstanding + cached free bytes
         self.peak_outstanding = 0
+        self.peak_resident = 0
 
     @staticmethod
     def _size_class(nbytes: int) -> int:
         return 1 << max(12, math.ceil(math.log2(max(nbytes, 1))))
 
+    def _drop_free(self, need_bytes: int) -> None:
+        """Drop cached buffers (any class) until ``need_bytes`` are freed."""
+        for cls in sorted(self._free, reverse=True):
+            bucket = self._free[cls]
+            while bucket and need_bytes > 0:
+                bucket.pop()
+                self._resident -= cls
+                need_bytes -= cls
+            if not bucket:
+                del self._free[cls]
+            if need_bytes <= 0:
+                return
+
     def acquire(self, nbytes: int) -> np.ndarray:
         cls = self._size_class(nbytes)
         with self._lock:
-            while self._outstanding + cls > self.budget and self._outstanding > 0:
+            while True:
+                bucket = self._free.get(cls)
+                if bucket:
+                    buf = bucket.pop()
+                    break  # recycled: resident bytes unchanged
+                if self._resident + cls > self.budget:
+                    self._drop_free(self._resident + cls - self.budget)
+                if self._resident + cls <= self.budget or self._outstanding == 0:
+                    buf = np.empty(cls, dtype=np.uint8)
+                    self._resident += cls
+                    break
                 self._lock.wait(timeout=10.0)
-            bucket = self._free.get(cls)
-            if bucket:
-                buf = bucket.pop()
-            else:
-                buf = np.empty(cls, dtype=np.uint8)
             self._outstanding += cls
             self.peak_outstanding = max(self.peak_outstanding, self._outstanding)
+            self.peak_resident = max(self.peak_resident, self._resident)
         return buf
 
     def release(self, buf: np.ndarray) -> None:
@@ -133,7 +164,9 @@ class ArrayStore:
                 "bytes_written": self.bytes_written,
                 "read_time": self.read_time,
                 "write_time": self.write_time,
-                "pinned_peak_bytes": self.pool.peak_outstanding,
+                # resident = outstanding + cached-for-reuse: the real pinned
+                # footprint the fixed supply bounds
+                "pinned_peak_bytes": self.pool.peak_resident,
             }
 
     def mark(self) -> dict:
@@ -462,6 +495,12 @@ class ParamStreamer:
     chunk reads with at most ``read_ahead`` requests in flight (the
     overlap-centric window; the shared pinned pool supplies backpressure),
     and ``save_all`` writes chunks back asynchronously.
+
+    The per-row API (``read_row`` / ``write_row`` / ``n_rows`` / ``names``)
+    is the I/O backend of the layer scheduler (``core/schedule.py``): the
+    ``PrefetchEngine`` issues ``read_row`` futures ahead of each layer's
+    gather and the layered epoch writes updated rows straight back — the
+    full array is never reassembled outside checkpointing.
     """
 
     def __init__(self, store: ArrayStore, read_ahead: int = 2):
@@ -471,11 +510,13 @@ class ParamStreamer:
         self._layout: Dict[str, Tuple[int, bool]] = {}
 
     def seed(self, named: Dict[str, np.ndarray], *, row_split: bool = True) -> None:
-        """(Re)populate the store; rows of 2-D+ arrays become chunks."""
+        """(Re)populate the store; rows of 2-D+ arrays become chunks (a
+        single-row array still splits — ``read_row`` must always hand the
+        layered epoch a row, even for 1-layer models)."""
         self._layout = {}
         for name, arr in named.items():
             arr = np.asarray(arr)
-            split = row_split and arr.ndim >= 2 and arr.shape[0] > 1
+            split = row_split and arr.ndim >= 2
             chunks = [arr[i] for i in range(arr.shape[0])] if split else [arr]
             for i, c in enumerate(chunks):
                 self.store.write(f"{name}/c{i}", c)
@@ -511,4 +552,24 @@ class ParamStreamer:
                     self.store.write(f"{name}/c{i}", arr[i])
             else:
                 self.store.write(f"{name}/c0", arr)
+        self.store.flush()
+
+    # -- per-row scheduler backend -----------------------------------------
+
+    def names(self) -> List[str]:
+        return list(self._layout)
+
+    def n_rows(self, name: str) -> int:
+        return self._layout[name][0]
+
+    def read_row(self, name: str, i: int) -> Future:
+        """Async read of one chunk (layer row / whole leaf) — the fetch the
+        scheduler's ``PrefetchEngine`` issues ahead of the layer's use."""
+        return self.store.read(f"{name}/c{i}")
+
+    def write_row(self, name: str, i: int, arr: np.ndarray) -> Future:
+        """Async write-back of one updated row; ``flush()`` commits."""
+        return self.store.write(f"{name}/c{i}", np.asarray(arr))
+
+    def flush(self) -> None:
         self.store.flush()

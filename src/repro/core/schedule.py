@@ -1,0 +1,219 @@
+"""Overlap-centric layer scheduler (paper Sec. 6): the subsystem that owns a
+step's layer-granular parameter movement.
+
+ZeRO-Infinity's headline claim — training models larger than aggregate device
+memory — rests on never materializing the whole parameter set at once:
+parameters live in the slow tiers (host DRAM / NVMe) and are streamed through
+a bounded window of layers, prefetched ahead of use and evicted immediately
+after, so the device-resident working set is ``O(window)``, not ``O(L)``.
+This module is that scheduler, split into three pieces so each is testable
+in isolation:
+
+  * ``LayerSchedule`` — the *pure plan*: an ordered event stream
+    (``prefetch`` / ``materialize`` / ``use`` / ``evict``) for one pass over
+    the layers (forward order, reversed for backward — the paper's
+    "parameters are loaded one additional time" with recompute). Invariants
+    (property-tested in tests/test_schedule.py): every layer is materialized
+    and used exactly once per pass, residency never exceeds the window, and
+    eviction order matches use order.
+  * ``WorkingSetManager`` — residency accounting: peak resident bytes of
+    scheduler-managed parameters per step, prefetch hit rate (how often a
+    row was already in flight when its turn came), and eviction counts —
+    surfaced as the ``peak_resident_param_bytes`` / ``prefetch_hit_rate`` /
+    ``evictions`` step metrics.
+  * ``PrefetchEngine`` — the I/O driver: issues asynchronous slow-tier reads
+    (through ``ParamStreamer``'s per-layer row API, its backend) ahead of
+    use and resolves them at materialization.
+
+``default_prefetch_layers`` derives the window from the paper's Sec. 3–4
+memory/bandwidth model (``core/model_math.py``): the smallest window whose
+per-layer compute time hides one layer's slow-tier fetch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+from repro.core import model_math
+
+# Paper Fig. 2b / Sec. 4 nominal rates used when no measured bandwidth is
+# available: per-device NVMe bandwidth and per-device peak throughput.
+PAPER_NVME_BYTES_PER_S = 1.6e9
+PAPER_PEAK_FLOPS = 70e12
+
+
+def default_prefetch_layers(num_layers: int, layer_param_count: int,
+                            batch_tokens: int, *,
+                            slow_bw: float = PAPER_NVME_BYTES_PER_S,
+                            peak_flops: float = PAPER_PEAK_FLOPS) -> int:
+    """Bandwidth-aware window (paper Secs. 3–4).
+
+    One layer's slow-tier fetch moves ``2 * layer_param_count`` bytes (bf16)
+    at ``slow_bw``; one layer's compute is its share of Eq. 8,
+    ``2 * 4 * batch_tokens * layer_param_count`` FLOPs at ``peak_flops``.
+    The window is the number of layers of compute needed to hide one fetch
+    (+1 for the layer in use), clamped so the working set stays strictly
+    below full residency whenever the model has more than one layer.
+    """
+    if num_layers <= 1:
+        return 1
+    read_t = (model_math.BYTES_PER_PARAM_FP16 * layer_param_count
+              / max(slow_bw, 1.0))
+    compute_t = 2.0 * 4.0 * max(batch_tokens, 1) * layer_param_count / peak_flops
+    window = int(math.ceil(read_t / max(compute_t, 1e-12))) + 1
+    return max(1, min(window, num_layers - 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One scheduler action. ``op`` ∈ {prefetch, materialize, use, evict}."""
+
+    op: str
+    layer: int
+
+
+class LayerSchedule:
+    """The pure movement plan for one pass over ``num_layers`` layers.
+
+    ``window`` bounds how many layers may be materialized (resident) at
+    once; ``read_ahead`` adds extra reads in flight beyond the materialized
+    window (the ``--read-ahead`` knob — backpressured by the shared pinned
+    pool). The plan is deterministic and engine-agnostic: executing it with
+    any ``PrefetchEngine`` yields the overlap-centric schedule.
+    """
+
+    def __init__(self, num_layers: int, window: int, read_ahead: int = 1):
+        assert num_layers >= 1 and window >= 1 and read_ahead >= 1
+        self.num_layers = num_layers
+        self.window = min(window, num_layers)
+        self.read_ahead = read_ahead
+
+    def pass_events(self, order: Optional[Sequence[int]] = None) -> List[Event]:
+        order = list(order) if order is not None else list(range(self.num_layers))
+        n = len(order)
+        # reads issued this far ahead of use: the window-1 rows materialized
+        # ahead each needed one, plus read_ahead still in flight beyond them
+        horizon = self.window + self.read_ahead
+        events: List[Event] = []
+        prefetched = [False] * n
+        materialized = [False] * n
+        for idx in range(n):
+            for j in range(idx, min(n, idx + horizon)):
+                if not prefetched[j]:
+                    events.append(Event("prefetch", order[j]))
+                    prefetched[j] = True
+            for j in range(idx, min(n, idx + self.window)):
+                if not materialized[j]:
+                    events.append(Event("materialize", order[j]))
+                    materialized[j] = True
+            events.append(Event("use", order[idx]))
+            events.append(Event("evict", order[idx]))  # immediately after use
+        return events
+
+    def forward(self) -> List[Event]:
+        return self.pass_events(range(self.num_layers))
+
+    def backward(self) -> List[Event]:
+        return self.pass_events(range(self.num_layers - 1, -1, -1))
+
+
+class WorkingSetManager:
+    """Residency + prefetch-effectiveness accounting for one executor.
+
+    ``begin_step()`` resets the per-step view; ``stats()`` returns the step
+    metrics. Byte counts cover scheduler-managed parameters only (the
+    windowed rows/leaves) — replicated small states (embeddings, norms) are
+    always device-resident and excluded by construction.
+    """
+
+    def __init__(self):
+        self.current_bytes = 0
+        self.begin_step()
+
+    def begin_step(self) -> None:
+        self.peak_bytes = self.current_bytes
+        self.evictions = 0
+        self.hits = 0
+        self.misses = 0
+
+    def on_materialize(self, nbytes: int, hit: bool) -> None:
+        self.current_bytes += nbytes
+        self.peak_bytes = max(self.peak_bytes, self.current_bytes)
+        if hit:
+            self.hits += 1
+        else:
+            self.misses += 1
+
+    def on_evict(self, nbytes: int) -> None:
+        self.current_bytes -= nbytes
+        self.evictions += 1
+
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "peak_resident_param_bytes": self.peak_bytes,
+            "prefetch_hit_rate": self.hits / total if total else 0.0,
+            "evictions": self.evictions,
+        }
+
+
+class PrefetchEngine:
+    """Executes a ``LayerSchedule``'s I/O against an async fetch backend.
+
+    ``fetch(unit)`` returns a list of futures (one per rank shard for the
+    explicit engine's rows; a single future for the GSPMD engine's leaves).
+    ``prefetch`` issues the reads; ``materialize`` resolves them — a *hit*
+    only when the unit was prefetched earlier AND every read had already
+    completed when its turn came (the prefetch fully hid the slow-tier
+    latency; a still-in-flight or on-demand fetch stalls the consumer and
+    counts as a miss) — and records the bytes as resident until ``evict``.
+    """
+
+    def __init__(self, fetch: Callable[[int], list], ws: WorkingSetManager):
+        self._fetch = fetch
+        self.ws = ws
+        self._inflight: Dict[int, list] = {}
+        self._resident: Dict[int, int] = {}  # unit -> materialized nbytes
+
+    def prefetch(self, unit) -> None:
+        if unit not in self._inflight and unit not in self._resident:
+            self._inflight[unit] = self._fetch(unit)
+
+    def materialize(self, unit) -> list:
+        futs = self._inflight.pop(unit, None)
+        hit = futs is not None and all(f.done() for f in futs)
+        if futs is None:
+            futs = self._fetch(unit)
+        vals = [f.result() for f in futs]
+        nbytes = sum(int(v.nbytes) for v in vals)
+        self._resident[unit] = nbytes
+        self.ws.on_materialize(nbytes, hit)
+        return vals
+
+    def evict(self, unit) -> None:
+        nbytes = self._resident.pop(unit, None)
+        if nbytes is not None:
+            self.ws.on_evict(nbytes)
+
+    def run_events(self, events, *, on_materialize, on_use, on_evict=None) -> None:
+        """The single interpreter of a ``LayerSchedule`` plan: I/O ops are
+        handled here, ``on_materialize(unit, vals)`` receives each unit's
+        fetched payloads, ``on_use(unit)`` runs the consumer's compute, and
+        ``on_evict(unit)`` (optional) drops consumer-side residents before
+        the accounting eviction."""
+        for ev in events:
+            if ev.op == "prefetch":
+                self.prefetch(ev.layer)
+            elif ev.op == "materialize":
+                on_materialize(ev.layer, self.materialize(ev.layer))
+            elif ev.op == "use":
+                on_use(ev.layer)
+            else:
+                if on_evict is not None:
+                    on_evict(ev.layer)
+                self.evict(ev.layer)
+
+    @property
+    def resident_units(self) -> Iterable:
+        return self._resident.keys()

@@ -78,6 +78,11 @@ class ExplicitZero3Engine:
         shards only, and the executor (``core/executor.py``) streams params,
         grads, and optimizer states through its ``ArrayStore`` tiers with
         the read(k+1) || update(k) || write(k-1) pipeline.
+      * ``param_tier=nvme`` — the monolithic step is replaced entirely by
+        the scheduler-driven layered epoch (``make_layer_fns`` +
+        ``core/schedule.py``): per-layer rows are materialized just-in-time
+        inside a prefetch window and evicted after use, so peak device
+        residency of the flat params is O(window), not O(L).
     """
 
     def __init__(self, run: RunConfig, mesh: Mesh):
@@ -92,7 +97,7 @@ class ExplicitZero3Engine:
         self.block_fn = transformer.make_block_fn(run.model, self.rules, run.parallel)
         self.defs = transformer.param_defs(run.model)
         self.opt_tier = run.offload.opt_tier
-        self.offgraph = run.offload.opt_offgraph
+        self.offgraph = run.opt_offgraph
         hk = (compat.host_memory_kind()
               if compat.host_offload_supported() else None)
         self.opt_host_kind = (hk if self.opt_tier == "host" and not self.offgraph
@@ -216,6 +221,22 @@ class ExplicitZero3Engine:
         other = sum(int(jnp.prod(jnp.array(d.shape))) if d.shape else 1
                     for d in leaves)
         return blocks + other
+
+    def _rep_specs(self):
+        """Replicated PartitionSpec trees for the small non-flat states."""
+        rep = P()
+        leaf = lambda x: isinstance(x, pt.ParamDef)
+        other = {
+            "embed": jax.tree.map(lambda d: rep, self.defs["embed"], is_leaf=leaf),
+            "ln_f": jax.tree.map(lambda d: rep, self.defs["ln_f"], is_leaf=leaf),
+        }
+        opt = adam_mod.AdamState(
+            rep,
+            jax.tree.map(lambda _: rep, other),
+            jax.tree.map(lambda _: rep, other),
+            jax.tree.map(lambda _: rep, other),
+        )
+        return other, opt
 
     # ------------------------------------------------------------------
     # train step
@@ -349,18 +370,7 @@ class ExplicitZero3Engine:
 
         flat_spec = self._flat_spec()
         rep = P()
-        other_specs = {
-            "embed": jax.tree.map(lambda d: rep, self.defs["embed"],
-                                  is_leaf=lambda x: isinstance(x, pt.ParamDef)),
-            "ln_f": jax.tree.map(lambda d: rep, self.defs["ln_f"],
-                                 is_leaf=lambda x: isinstance(x, pt.ParamDef)),
-        }
-        opt_specs = adam_mod.AdamState(
-            rep,
-            jax.tree.map(lambda _: rep, other_specs),
-            jax.tree.map(lambda _: rep, other_specs),
-            jax.tree.map(lambda _: rep, other_specs),
-        )
+        other_specs, opt_specs = self._rep_specs()
         state_specs = {
             "flat": flat_spec,
             "other": other_specs, "other_opt": opt_specs, "step": rep,
@@ -409,6 +419,110 @@ class ExplicitZero3Engine:
             return to_kind(new_state, None), metrics
 
         return host_tier_step
+
+    # ------------------------------------------------------------------
+    # per-layer pieces for the scheduler-driven layered epoch
+    # ------------------------------------------------------------------
+
+    def layer_row_sharding(self) -> NamedSharding:
+        """Global (P,) one-layer row: each rank holds its (P/dp) slice —
+        the bandwidth-centric layout of a single materialized layer."""
+        return NamedSharding(self.mesh, P(self.axis))
+
+    def make_layer_fns(self):
+        """Jitted per-layer pieces consumed by the layer scheduler
+        (``param_tier=nvme``): the executor iterates (L, P/dp) rows through
+        the prefetch window — forward order, reversed for backward — so the
+        full flat array is never assembled on device. ``layer_vjp`` runs the
+        layer's forward again inside ``jax.vjp`` (the paper's "parameters
+        are loaded one additional time" with recompute) and its row
+        cotangent is exactly the reduce-scattered local gradient shard (the
+        transpose of the all-gather). All small replicated states update in
+        ``finish`` with the same partitioned-Adam math as the in-graph step.
+        """
+        assert self.run.parallel.partition_mode == "allgather", (
+            "layered epochs need the bandwidth-centric (allgather) row "
+            "layout; the broadcast baseline stores whole layers per owner")
+        cfg = self.run.model
+        tc = self.run.train
+        axis, dp = self.axis, self.dp
+        rules = self.rules
+        block_fn = self.block_fn
+        unflatten = self._unflatten_layer
+        mesh = self.mesh
+        rep = P()
+        xspec = P(axis, None, None)
+        bspec = P(axis, None)
+        rowspec = P(axis)
+        other_specs, _ = self._rep_specs()
+
+        def smap(f, in_specs, out_specs):
+            fn = compat.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                  out_specs=out_specs, check_vma=False)
+            with compat.set_mesh(mesh):
+                return jax.jit(fn)
+
+        def _block(x, row):
+            blk = unflatten(jax.lax.all_gather(row, axis, tiled=True),
+                            jnp.bfloat16)
+            B, S = x.shape[0], x.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+            return block_fn(x, blk, positions)
+
+        def _embed_fwd(other, tokens):
+            return cm.embed(other["embed"], tokens, cfg, rules)
+
+        def _layer_fwd(x, row):
+            return _block(x, row)
+
+        def _layer_vjp(x, row, dy):
+            _, vjp = jax.vjp(_block, x, row)
+            dx, drow = vjp(dy)
+            return dx, drow.astype(jnp.float32)
+
+        def _head(x, other, labels):
+            def f(x, other):
+                h = cm.norm(x, other["ln_f"], cfg.norm_kind)
+                lg = cm.logits(other["embed"], h, cfg, rules)
+                return cm.lm_loss(lg[:, :-1], labels[:, 1:], cfg.vocab_size) / dp
+
+            loss_s, vjp = jax.vjp(f, x, other)
+            dx, g_other = vjp(jnp.ones_like(loss_s))
+            loss = jax.lax.psum(loss_s, axis)
+            g_other = jax.tree.map(lambda g: jax.lax.psum(g, axis), g_other)
+            return loss, dx, g_other
+
+        def _embed_vjp(other, tokens, dx0):
+            _, vjp = jax.vjp(
+                lambda o: cm.embed(o["embed"], tokens, cfg, rules), other)
+            (g,) = vjp(dx0)
+            return jax.tree.map(lambda g_: jax.lax.psum(g_, axis), g)
+
+        def _finish(other, other_opt, step, g_head, g_emb, sumsq_flat):
+            g_other = jax.tree.map(jnp.add, g_head, g_emb)
+            new_step = step + 1
+            lr = adam_mod.lr_at(tc, new_step)
+            gnorm = jnp.sqrt(sumsq_flat
+                             + sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                                   for x in jax.tree.leaves(g_other)))
+            new_other, new_other_opt = adam_mod.apply_updates(
+                g_other, other_opt, tc, params_prev=other)
+            return new_other, new_other_opt, new_step, \
+                {"grad_norm": gnorm, "lr": lr}
+
+        with compat.set_mesh(mesh):
+            finish = jax.jit(_finish)
+        return {
+            "embed_fwd": smap(_embed_fwd, (other_specs, bspec), xspec),
+            "layer_fwd": smap(_layer_fwd, (xspec, rowspec), xspec),
+            "layer_vjp": smap(_layer_vjp, (xspec, rowspec, xspec),
+                              (xspec, rowspec)),
+            "head": smap(_head, (xspec, other_specs, bspec),
+                         (rep, xspec, other_specs)),
+            "embed_vjp": smap(_embed_vjp, (other_specs, bspec, xspec),
+                              other_specs),
+            "finish": finish,
+        }
 
     def state_structs(self):
         """ShapeDtypeStruct tree matching ``init_state`` for the active tier."""

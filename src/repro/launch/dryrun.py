@@ -1,5 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+
+if "--smoke-exec" not in sys.argv:
+    # the production-mesh dry-run wants 512 fake devices; the smoke-exec
+    # gate runs real steps on one CPU device (flag must be set pre-import)
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -8,9 +13,17 @@ For each cell this proves, without hardware: the sharding composition
 partitions (collectives resolve), and it yields the compiled artifact from
 which EXPERIMENTS.md's roofline terms are derived.
 
+``--smoke-exec`` instead executes a few real steps through the
+InfinityExecutor on a local mesh (the tier-1 CI layer-scheduler gate): with
+``--offload-param nvme`` it asserts ``peak_resident_param_bytes`` stays
+strictly below the total parameter bytes — params never fully reside on
+device.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --mesh pod1 --arch smollm-135m
   PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell, cached
+  PYTHONPATH=src python -m repro.launch.dryrun --smoke-exec --engine zero3 \
+      --arch smollm-135m --offload-param nvme --prefetch-layers 2
 """
 
 import argparse
@@ -124,6 +137,66 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
     return rec
 
 
+def smoke_exec(args) -> None:
+    """Tier-1 CI gate: run real steps with the configured tiers on the smoke
+    config and, for NVMe-resident params, assert the layer scheduler keeps
+    peak residency strictly below total param bytes."""
+    import dataclasses
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config import RunConfig, TrainConfig, make_offload, make_parallel
+    from repro.core.executor import InfinityExecutor
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = dataclasses.replace(configs.smoke(args.arch or "smollm-135m"),
+                              n_layers=args.exec_layers)
+    run = RunConfig(
+        model=cfg, parallel=make_parallel(args.engine, remat="none"),
+        offload=make_offload(args.offload, param_tier=args.offload_param,
+                             grad_tier=args.offload_grad,
+                             nvme_dir=tempfile.mkdtemp(prefix="repro_smoke_nvme"),
+                             prefetch_layers=args.prefetch_layers,
+                             param_read_ahead=args.read_ahead,
+                             nvme_workers=args.nvme_workers),
+        train=TrainConfig(lr=3e-3, warmup_steps=2))
+    mesh = make_local_mesh(1, 1)
+    ex = InfinityExecutor(run, mesh)
+    state = ex.init_state(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    step = ex.make_train_step()
+    metrics = {}
+    for _ in range(args.exec_steps):
+        state, metrics = step(state, batch)
+    peak = int(metrics.get("peak_resident_param_bytes", -1))
+    total = ex.total_param_bytes
+    print(f"smoke-exec: loss={float(metrics['loss']):.4f} "
+          f"peak_resident_param_bytes={peak} total_param_bytes={total} "
+          f"prefetch_hit_rate={metrics.get('prefetch_hit_rate')} "
+          f"evictions={metrics.get('evictions')}")
+    if args.offload_param == "nvme":
+        if args.engine != "zero3":
+            # the pjit engine's scheduler bounds host *staging* only — its
+            # jit step still assembles every leaf on device, so the strict
+            # device-residency bound is a zero3 (layered-epoch) claim
+            print("smoke-exec: pjit engine — host-staging bound only "
+                  f"(peak {peak} <= total {total}: {peak <= total})")
+            if peak > total:
+                raise SystemExit("host staging exceeded total param bytes")
+            return
+        # strictly below total whenever the window is smaller than the model
+        # (a 1-layer model's window necessarily equals full residency)
+        window = args.prefetch_layers or cfg.n_layers - 1
+        bound = total if min(window, cfg.n_layers) >= cfg.n_layers else total - 1
+        if not 0 <= peak <= bound:
+            raise SystemExit(
+                f"layer scheduler violated the residency bound: peak {peak} "
+                f"exceeds {bound} (total {total})")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, help="arch id (default: all)")
@@ -153,8 +226,27 @@ def main() -> None:
     ap.add_argument("--offload-grad", default="device",
                     choices=["device", "host", "nvme"],
                     help="gradient-drain tier (host/nvme lower grads-only)")
+    ap.add_argument("--prefetch-layers", type=int, default=0,
+                    help="layer-scheduler window for slow-tier params "
+                         "(0 = bandwidth-aware auto)")
+    ap.add_argument("--read-ahead", type=int, default=2,
+                    help="slow-tier param reads in flight beyond the window")
+    ap.add_argument("--nvme-workers", type=int, default=2,
+                    help="worker threads per slow-tier store")
+    ap.add_argument("--smoke-exec", action="store_true",
+                    help="execute real steps on a local mesh and check the "
+                         "scheduler residency bound (tier-1 CI gate)")
+    ap.add_argument("--exec-steps", type=int, default=2,
+                    help="steps to run under --smoke-exec")
+    ap.add_argument("--exec-layers", type=int, default=4,
+                    help="layer count override under --smoke-exec (must "
+                         "exceed the window for a strict residency bound)")
     ap.add_argument("--tag", default="", help="suffix for the result file")
     args = ap.parse_args()
+
+    if args.smoke_exec:
+        smoke_exec(args)
+        return
 
     archs = [args.arch] if args.arch else list(configs.ARCH_IDS)
     shapes = [args.shape] if args.shape else list(SHAPES)
@@ -165,7 +257,10 @@ def main() -> None:
                               engine=args.engine, prefetch=args.prefetch)
     offload = OffloadConfig(param_tier=args.offload_param,
                             grad_tier=args.offload_grad,
-                            opt_tier=args.offload)
+                            opt_tier=args.offload,
+                            prefetch_layers=args.prefetch_layers,
+                            param_read_ahead=args.read_ahead,
+                            nvme_workers=args.nvme_workers)
     overrides = {}
     if args.score_dtype != "float32":
         overrides["score_dtype"] = args.score_dtype

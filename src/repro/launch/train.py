@@ -53,6 +53,13 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="reduce-scattered gradient drain tier")
     ap.add_argument("--nvme-dir", default="/tmp/repro_nvme")
     ap.add_argument("--no-overlap", action="store_true", help="disable NVMe overlap")
+    ap.add_argument("--prefetch-layers", type=int, default=0,
+                    help="layer-scheduler window for slow-tier params "
+                         "(0 = bandwidth-aware auto from the paper's model)")
+    ap.add_argument("--read-ahead", type=int, default=2,
+                    help="slow-tier param reads in flight beyond the window")
+    ap.add_argument("--nvme-workers", type=int, default=2,
+                    help="worker threads per slow-tier store")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", default="no", choices=["no", "auto"])
@@ -69,7 +76,10 @@ def make_run(args) -> RunConfig:
                                grad_accum=args.grad_accum),
         offload=make_offload(args.offload_opt, param_tier=args.offload_param,
                              grad_tier=args.offload_grad, nvme_dir=args.nvme_dir,
-                             overlap=not args.no_overlap),
+                             overlap=not args.no_overlap,
+                             prefetch_layers=args.prefetch_layers,
+                             param_read_ahead=args.read_ahead,
+                             nvme_workers=args.nvme_workers),
         train=TrainConfig(lr=args.lr, steps=args.steps, checkpoint_dir=args.ckpt_dir,
                           checkpoint_every=args.ckpt_every, seed=args.seed),
     )
@@ -109,7 +119,7 @@ def train(args) -> dict:
                 # them back onto this mesh's shardings (any dp degree)
                 state = jax.device_put(restored, executor.state_shardings())
                 start_step = extra["next_step"]
-                executor.reseed(state, step=start_step)
+                state = executor.reseed(state, step=start_step)
             print(f"resumed from checkpoint at step {start_step}")
 
         step_fn = executor.make_train_step()
@@ -132,7 +142,10 @@ def train(args) -> dict:
                 if step % args.log_every == 0:
                     logger.log(step, loss, tokens, dt)
                 if run.train.checkpoint_every and (step + 1) % run.train.checkpoint_every == 0:
-                    ckpt.save(step + 1, state, {"next_step": step + 1})
+                    # slow-tier-resident params are materialized from the
+                    # store for the snapshot (the carried leaf is a struct)
+                    ckpt.save(step + 1, executor.checkpoint_state(state),
+                              {"next_step": step + 1})
         ckpt.wait()
         history["final_state"] = state
         stats = executor.bandwidth_stats()

@@ -83,6 +83,7 @@ TIER_MATRIX = [
     ("device", "device", "host"),
     ("host", "device", "nvme"),
     ("device", "host", "device"),
+    ("nvme", "device", "device"),
     ("nvme", "nvme", "nvme"),
 ]
 
@@ -126,13 +127,18 @@ def test_full_nvme_offload_counters_and_rank_partition(mesh, tmp_path,
     # per-step metrics are deltas: re-running one more step must not report
     # cumulative (≈2x) bytes for the same work
     assert metrics["opt_read_bytes"] == ex.offload.last_step_stats["bytes_read"]
-    # optimizer states live per-rank (the paper's per-worker partition)
-    assert all(k.startswith("rank0/") for k in ex.opt_store.keys())
-    # params stream per-rank rows; grads drain under their own namespace
+    # optimizer states live per-rank per-layer (the paper's per-worker
+    # partition at the scheduler's layer granularity)
+    assert all(k.startswith("rank0/l") for k in ex.opt_store.keys())
+    # params stream per-rank rows; grads drain per-layer under their own ns
     assert any(k.startswith("rank0/") for k in ex.param_store.keys())
     assert all(k.endswith("/g") for k in ex.grad_store.keys())
     # the three stores share one pinned staging pool
     assert ex.param_store.pool is ex.opt_store.pool is ex.grad_store.pool
+    # layer scheduler: the flat params were never fully device-resident
+    assert 0 < metrics["peak_resident_param_bytes"] < ex.total_param_bytes
+    assert 0.0 <= metrics["prefetch_hit_rate"] <= 1.0
+    assert metrics["evictions"] > 0
 
 
 def test_gspmd_engine_nvme_matches_explicit(mesh, tmp_path, device_reference):

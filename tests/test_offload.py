@@ -124,6 +124,54 @@ def test_buffer_pool_budget_under_concurrency():
     assert pool._outstanding == 0  # everything returned
 
 
+def test_buffer_pool_resident_budget_varied_sizes():
+    """The budget must bound *resident* pinned bytes (outstanding + cached
+    free buffers), not just outstanding ones. Regression: concurrent workers
+    cycling through different size classes used to accumulate one cached
+    buffer per class with no bound — the pool exceeded its fixed pinned
+    supply exactly when the scheduler's worker threads mixed row sizes."""
+    budget = 64 << 10
+    pool = PinnedBufferPool(budget)
+    errors = []
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(60):
+                # size classes from 4 KiB to 32 KiB — all under the budget
+                # individually, unbounded if every class stays cached
+                buf = pool.acquire(int(rng.integers(1 << 10, 32 << 10)))
+                buf[:8] = seed
+                pool.release(buf)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert pool._outstanding == 0  # everything returned
+    assert pool.peak_outstanding <= budget
+    # the fixed pinned supply was never exceeded, caching included
+    assert pool.peak_resident <= budget, pool.peak_resident
+    assert pool._resident <= budget
+
+
+def test_buffer_pool_oversized_request_degrades_gracefully():
+    """A single request larger than the whole budget must still be served
+    (direct allocation) once nothing else is outstanding — never deadlock."""
+    pool = PinnedBufferPool(4 << 10)
+    buf = pool.acquire(64 << 10)
+    assert buf.nbytes >= 64 << 10
+    pool.release(buf)
+    # and the oversized cached buffer is dropped to make room for new work
+    small = pool.acquire(1 << 10)
+    pool.release(small)
+    assert pool._resident <= max(pool.budget, small.nbytes)
+
+
 @pytest.mark.parametrize("overlap", [True, False])
 def test_flush_leaves_no_pending_futures(tmp_path, overlap):
     store = NvmeStore(str(tmp_path / f"ov{overlap}"), pool_mb=8,
@@ -373,6 +421,29 @@ def test_param_streamer_roundtrip(tmp_path, read_ahead):
     loaded2 = ps.load_all()
     for k in named2:
         np.testing.assert_array_equal(loaded2[k], named2[k])
+
+
+def test_param_streamer_row_api(tmp_path):
+    """The scheduler's I/O backend: read_row/write_row address individual
+    layer rows without assembling the full array."""
+    import ml_dtypes
+
+    store = NvmeStore(str(tmp_path), pool_mb=4)
+    ps = ParamStreamer(store, read_ahead=2)
+    rows = np.arange(12, dtype=np.float32).reshape(4, 3).astype(ml_dtypes.bfloat16)
+    ps.seed({"rank0": rows}, row_split=True)
+    assert ps.names() == ["rank0"]
+    assert ps.n_rows("rank0") == 4
+    got = ps.read_row("rank0", 2).result()
+    np.testing.assert_array_equal(got, rows[2])
+    # write one row back; the others are untouched
+    new_row = (rows[2].astype(np.float32) * 2).astype(ml_dtypes.bfloat16)
+    ps.write_row("rank0", 2, new_row)
+    ps.flush()
+    np.testing.assert_array_equal(ps.read_row("rank0", 2).result(), new_row)
+    np.testing.assert_array_equal(ps.read_row("rank0", 1).result(), rows[1])
+    loaded = ps.load_all()["rank0"]
+    np.testing.assert_array_equal(loaded[2], new_row)
 
 
 def test_param_streamer_whole_leaf_mode(tmp_path):

@@ -1,0 +1,235 @@
+"""Layer scheduler (core/schedule.py): plan invariants (hypothesis property
+test), the bandwidth-aware default window, prefetch-engine accounting, and
+the tentpole acceptance — with NVMe-resident params on a multi-layer config
+the loss trajectory matches the all-device baseline while
+``peak_resident_param_bytes`` stays strictly below total param bytes and
+scales with ``--prefetch-layers``: params never fully reside on device."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import RunConfig, TrainConfig, make_offload, make_parallel
+from repro.core.executor import InfinityExecutor
+from repro.core.offload import HostArrayStore, ParamStreamer
+from repro.core.schedule import (LayerSchedule, PrefetchEngine,
+                                 WorkingSetManager, default_prefetch_layers)
+from repro.launch.mesh import make_local_mesh
+from repro.testing import optional_hypothesis
+
+given, settings, st, HAVE_HYPOTHESIS = optional_hypothesis()
+
+
+# ---------------------------------------------------------------------------
+# plan invariants
+# ---------------------------------------------------------------------------
+
+
+def _check_pass(events, order, window):
+    """The scheduler-plan contract for one pass (the satellite property)."""
+    n = len(order)
+    prefetched, materialized, used, evicted = set(), set(), [], []
+    resident = set()
+    for ev in events:
+        if ev.op == "prefetch":
+            assert ev.layer not in prefetched, "double prefetch"
+            prefetched.add(ev.layer)
+        elif ev.op == "materialize":
+            assert ev.layer in prefetched, "materialize before prefetch"
+            assert ev.layer not in materialized, "double materialize"
+            materialized.add(ev.layer)
+            resident.add(ev.layer)
+        elif ev.op == "use":
+            assert ev.layer in resident, "use of a non-resident layer"
+            used.append(ev.layer)
+        else:
+            assert ev.layer in resident, "evict of a non-resident layer"
+            resident.discard(ev.layer)
+            evicted.append(ev.layer)
+        # residency never exceeds the window, at every point in the plan
+        assert len(resident) <= window, (len(resident), window)
+    # every layer materialized and used exactly once per pass
+    assert materialized == set(order)
+    assert used == list(order)
+    # eviction order matches use order, and everything was evicted
+    assert evicted == used
+    assert not resident
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_schedule_plan_property(data):
+    """Property: for any (num_layers, window, read_ahead) the plan
+    materializes every layer exactly once per pass, bounds residency by the
+    window, and evicts in use order — forward and backward."""
+    n = data.draw(st.integers(1, 24), label="num_layers")
+    window = data.draw(st.integers(1, 8), label="window")
+    read_ahead = data.draw(st.integers(1, 6), label="read_ahead")
+    sched = LayerSchedule(n, window, read_ahead=read_ahead)
+    _check_pass(sched.forward(), list(range(n)), sched.window)
+    _check_pass(sched.backward(), list(range(n - 1, -1, -1)), sched.window)
+
+
+def test_schedule_plan_smoke():
+    """Deterministic instance of the property (runs without hypothesis)."""
+    sched = LayerSchedule(6, 2, read_ahead=3)
+    _check_pass(sched.forward(), list(range(6)), 2)
+    _check_pass(sched.backward(), list(range(5, -1, -1)), 2)
+
+
+def test_default_prefetch_layers_bandwidth_model():
+    """The auto window follows the paper's Sec. 3-4 model: slower tiers and
+    smaller batches need deeper windows; it stays strictly below full
+    residency on multi-layer models."""
+    # big batch: compute per layer dwarfs the fetch -> minimal window
+    small = default_prefetch_layers(32, 1 << 20, batch_tokens=1 << 20)
+    # tiny batch: fetch dominates -> deeper window, but < num_layers
+    big = default_prefetch_layers(32, 1 << 20, batch_tokens=8)
+    assert 1 <= small <= big <= 31
+    assert default_prefetch_layers(1, 1 << 20, 8) == 1
+    # higher slow-tier bandwidth shrinks the window
+    fast = default_prefetch_layers(32, 1 << 20, 4096, slow_bw=1e12)
+    slow = default_prefetch_layers(32, 1 << 20, 4096, slow_bw=1e8)
+    assert fast <= slow
+
+
+# ---------------------------------------------------------------------------
+# prefetch engine + working-set accounting
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_engine_accounting():
+    """Hits are materializations served by an earlier prefetch; resident
+    bytes rise at materialize and fall at evict."""
+    store = HostArrayStore(pool_mb=4, overlap=False)
+    ps = ParamStreamer(store, read_ahead=2)
+    rows = np.arange(12, dtype=np.float32).reshape(3, 4)
+    ps.seed({"rank0": rows}, row_split=True)
+    ws = WorkingSetManager()
+    pe = PrefetchEngine(lambda l: [ps.read_row("rank0", l)], ws)
+    ws.begin_step()
+    pe.prefetch(0)
+    (v0,) = pe.materialize(0)  # hit: was in flight
+    np.testing.assert_array_equal(v0, rows[0])
+    (v1,) = pe.materialize(1)  # miss: fetched on demand
+    assert ws.current_bytes == v0.nbytes + v1.nbytes
+    pe.evict(0)
+    pe.evict(1)
+    stats = ws.stats()
+    assert stats["prefetch_hit_rate"] == 0.5
+    assert stats["evictions"] == 2
+    assert stats["peak_resident_param_bytes"] == v0.nbytes + v1.nbytes
+    assert ws.current_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# tentpole acceptance: params never fully reside on device
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sched_env():
+    mesh = make_local_mesh(1, 1)
+    cfg = dataclasses.replace(configs.smoke("smollm-135m"), n_layers=4)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                          cfg.vocab_size)}
+    return mesh, cfg, batch
+
+
+def _run(env, nvme_dir, *, param="device", window=0, steps=3):
+    mesh, cfg, batch = env
+    tiers = (param,) * 3 if param == "nvme" else ("device",) * 3
+    run = RunConfig(model=cfg, parallel=make_parallel("zero3", remat="none"),
+                    offload=make_offload(tiers[2], param_tier=tiers[0],
+                                         grad_tier=tiers[1],
+                                         nvme_dir=str(nvme_dir),
+                                         prefetch_layers=window),
+                    train=TrainConfig(lr=3e-3, warmup_steps=2))
+    ex = InfinityExecutor(run, mesh)
+    state = ex.init_state(jax.random.PRNGKey(0))
+    step = ex.make_train_step()
+    traj, metrics = [], {}
+    for _ in range(steps):
+        state, metrics = step(state, batch)
+        traj.append((float(metrics["loss"]), float(metrics["grad_norm"])))
+    return np.asarray(traj), metrics, ex, state
+
+
+def test_layered_nvme_parity_and_residency(sched_env, tmp_path):
+    """Acceptance: NVMe-resident params on a 4-layer config match the
+    all-device trajectory while the scheduler keeps peak residency strictly
+    below total param bytes — and the carried flat leaf is dropped."""
+    base, _, _, _ = _run(sched_env, tmp_path / "dev")
+    traj, m, ex, state = _run(sched_env, tmp_path / "nvme", param="nvme",
+                              window=2)
+    np.testing.assert_allclose(traj, base, rtol=2e-3, atol=2e-3)
+    assert base[-1, 0] < base[0, 0]  # losses actually move
+
+    row_bytes = ex.total_param_bytes // 4  # one bf16 layer row, global
+    assert m["param_total_bytes"] == ex.total_param_bytes
+    assert 0 < m["peak_resident_param_bytes"] < ex.total_param_bytes
+    assert m["peak_resident_param_bytes"] == 2 * row_bytes  # == window rows
+    # hit = prefetched AND complete when needed; worker timing varies, but
+    # the metric must be a well-formed rate over both passes
+    assert 0.0 <= m["prefetch_hit_rate"] <= 1.0
+    assert m["evictions"] == 2 * 4  # fwd + bwd pass over 4 layers
+    # the carried leaf is a placeholder struct between steps — the store,
+    # not device memory, holds the parameters
+    assert isinstance(state["flat"], jax.ShapeDtypeStruct)
+
+
+def test_layered_residency_scales_with_window(sched_env, tmp_path):
+    """peak_resident_param_bytes scales with --prefetch-layers."""
+    peaks = {}
+    for w in (1, 3):
+        _, m, ex, _ = _run(sched_env, tmp_path / f"w{w}", param="nvme",
+                           window=w, steps=1)
+        peaks[w] = m["peak_resident_param_bytes"]
+        assert peaks[w] == w * ex.total_param_bytes // 4
+    assert peaks[1] < peaks[3]
+
+
+def test_layered_auto_window_is_bounded(sched_env, tmp_path):
+    """prefetch_layers=0 resolves a bandwidth-aware default that still keeps
+    residency strictly below full assembly."""
+    _, m, ex, _ = _run(sched_env, tmp_path / "auto", param="nvme", window=0,
+                       steps=1)
+    assert 0 < m["peak_resident_param_bytes"] < ex.total_param_bytes
+
+
+def test_layered_single_layer_model(sched_env, tmp_path):
+    """Regression: a 1-layer model must stream through the layered epoch
+    (ParamStreamer.seed used to skip row-splitting single-row shards, so
+    read_row handed the executor a (1, P) array and the step crashed)."""
+    mesh, cfg, batch = sched_env
+    cfg1 = dataclasses.replace(cfg, n_layers=1)
+    run = RunConfig(model=cfg1, parallel=make_parallel("zero3", remat="none"),
+                    offload=make_offload("nvme", param_tier="nvme",
+                                         grad_tier="nvme",
+                                         nvme_dir=str(tmp_path / "l1")),
+                    train=TrainConfig(lr=3e-3, warmup_steps=2))
+    ex = InfinityExecutor(run, mesh)
+    state = ex.init_state(jax.random.PRNGKey(0))
+    step = ex.make_train_step()
+    state, m = step(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert m["peak_resident_param_bytes"] == ex.total_param_bytes  # window==L==1
+    assert m["evictions"] == 2
+
+
+def test_layered_rejects_broadcast_mode_at_construction(sched_env, tmp_path):
+    """The broadcast (owner-rank) baseline has no per-rank rows to stream:
+    the executor must reject param_tier=nvme up front with a clear error,
+    not die mid-training after seeding the stores."""
+    mesh, cfg, _ = sched_env
+    run = RunConfig(model=cfg,
+                    parallel=make_parallel("zero3", remat="none",
+                                           partition_mode="broadcast"),
+                    offload=make_offload("nvme", param_tier="nvme",
+                                         nvme_dir=str(tmp_path / "bc")))
+    with pytest.raises(ValueError, match="allgather"):
+        InfinityExecutor(run, mesh)
