@@ -272,29 +272,66 @@ def train_step_micro() -> None:
 def executor_micro(engine: str = "pjit", tier: str = "device",
                    param_tier: str = "device", grad_tier: str = "device",
                    prefetch_layers: int = 0, read_ahead: int = 2,
-                   nvme_workers: int = 2) -> None:
+                   nvme_workers: int = 2, plan_mode: str = "manual",
+                   plan_args=None) -> None:
     import jax
     import jax.numpy as jnp
 
-    from repro import configs
-    from repro.config import RunConfig, TrainConfig, make_offload, make_parallel
+    from repro import configs, plan as plan_mod
+    from repro.config import (RunConfig, ShapeConfig, TrainConfig,
+                              make_offload, make_parallel)
     from repro.core.executor import InfinityExecutor
     from repro.launch.mesh import make_local_mesh
 
     nvme_dir = tempfile.mkdtemp(prefix="repro_bench_exec")
-    cell = f"{engine}_p{param_tier}_g{grad_tier}_o{tier}"
-    try:
-        mesh = make_local_mesh(1, 1)
-        run = RunConfig(model=configs.smoke("smollm-135m"),
+    cfg = configs.smoke("smollm-135m")
+    shape = ShapeConfig("bench", 128, 4, "train")
+    # Every cell gets a plan artifact recording WHY this configuration was
+    # chosen: --plan auto derives the config from it; manual cells attach a
+    # plan whose overrides are exactly the requested flags, so the JSON
+    # records the derived-vs-forced diff and the feasibility arithmetic.
+    hw = (plan_mod.hardware_from_args(plan_args, nvme_dir=nvme_dir)
+          if plan_args is not None else plan_mod.HardwareSpec.detect(nvme_dir))
+    if plan_mode != "manual" and plan_args is not None:
+        # auto (explicit flags become overrides) OR a saved plan JSON
+        # (arch-checked; explicit flags are warned-ignored)
+        plan = plan_mod.resolve_plan(plan_args, cfg, shape,
+                                     nvme_dir=nvme_dir, quiet=True,
+                                     hardware=hw)
+        run = plan.to_run_config(train=TrainConfig(), nvme_dir=nvme_dir)
+    else:
+        # the override set pins every plan field the manual construction
+        # below fixes, so the saved artifact records exactly what ran
+        plan = plan_mod.plan_run(cfg, shape, hw, overrides={
+            "engine": engine, "param_tier": param_tier,
+            "grad_tier": grad_tier, "opt_tier": tier,
+            "prefetch_layers": prefetch_layers, "read_ahead": read_ahead,
+            "nvme_workers": nvme_workers, "remat": "full", "grad_accum": 1,
+            "pinned_buffer_mb": 64, "act_tier": "device",
+        })
+        run = RunConfig(model=cfg,
                         parallel=make_parallel(engine),
-                        offload=make_offload(tier, param_tier=param_tier,
+                        offload=make_offload(opt_tier=tier,
+                                             param_tier=param_tier,
                                              grad_tier=grad_tier,
                                              nvme_dir=nvme_dir,
                                              prefetch_layers=prefetch_layers,
                                              param_read_ahead=read_ahead,
                                              nvme_workers=nvme_workers),
                         train=TrainConfig())
-        ex = InfinityExecutor(run, mesh)
+    eng_name = run.parallel.engine
+    cell = (f"{eng_name}_p{run.offload.param_tier}_g{run.offload.grad_tier}"
+            f"_o{run.offload.opt_tier}")
+    plan_path = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                             "bench", f"plan_{cell}.json")
+    plan.save(os.path.abspath(plan_path))
+    emit(f"executor/{cell}/plan_json", 0.0, os.path.abspath(plan_path))
+    emit(f"executor/{cell}/plan_feasible", 0.0, plan.feasible)
+    emit(f"executor/{cell}/plan_efficiency", 0.0,
+         f"{plan.predictions.get('efficiency', 1.0):.4f}")
+    try:
+        mesh = make_local_mesh(1, 1)
+        ex = InfinityExecutor(run, mesh, plan=plan)
         state = ex.init_state(jax.random.PRNGKey(0))
         batch = {"tokens": jnp.ones((4, 128), jnp.int32),
                  "labels": jnp.ones((4, 128), jnp.int32)}
@@ -319,9 +356,14 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
         # layered epoch bounds *device* residency (the never-fully-resident
         # evidence); the pjit scheduler bounds host *staging* only — its jit
         # step still assembles every leaf on device.
+        if "plan_residency_ok" in m:
+            emit(f"executor/{cell}/plan_residency_ok", 0.0,
+                 bool(m["plan_residency_ok"]))
+            emit(f"executor/{cell}/plan_peak_resident_param_bytes", 0.0,
+                 int(m["plan_peak_resident_param_bytes"]))
         if "peak_resident_param_bytes" in m:
             emit(f"executor/{cell}/residency_scope", 0.0,
-                 "device_window" if engine == "zero3" else "host_staging")
+                 "device_window" if eng_name == "zero3" else "host_staging")
             emit(f"executor/{cell}/peak_resident_param_bytes", 0.0,
                  int(m["peak_resident_param_bytes"]))
             emit(f"executor/{cell}/param_total_bytes", 0.0,
@@ -444,6 +486,9 @@ def main() -> None:
                     help="slow-tier param reads in flight beyond the window")
     ap.add_argument("--nvme-workers", type=int, default=2,
                     help="worker threads per slow-tier store")
+    from repro import plan as plan_mod
+
+    plan_mod.add_plan_args(ap)
     args = ap.parse_args()
     keys = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
@@ -452,7 +497,8 @@ def main() -> None:
             executor_micro(args.engine, args.offload,
                            args.offload_param, args.offload_grad,
                            args.prefetch_layers, args.read_ahead,
-                           args.nvme_workers)
+                           args.nvme_workers,
+                           plan_mode=args.plan, plan_args=args)
         else:
             BENCHES[k]()
 

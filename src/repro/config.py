@@ -7,7 +7,23 @@ assigned architecture; ``SHAPES`` defines the assigned input-shape set.
 from __future__ import annotations
 
 import dataclasses
+import warnings as _warnings
 from typing import Optional, Tuple
+
+
+def _require_choice(cls: str, field: str, value, allowed: tuple) -> None:
+    """Config validation that survives ``python -O`` (asserts don't) and
+    gives the planner a catchable, self-describing error for infeasible
+    overrides: the offending field and the allowed values."""
+    if value not in allowed:
+        raise ValueError(
+            f"{cls}.{field}={value!r}: must be one of {allowed}")
+
+
+def _require_min(cls: str, field: str, value, minimum) -> None:
+    if value < minimum:
+        raise ValueError(
+            f"{cls}.{field}={value!r}: must be >= {minimum}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,13 +110,18 @@ class ParallelConfig:
     engine: str = "pjit"  # pjit (GSPMD-native) | zero3 (explicit shard_map)
 
     def __post_init__(self):
-        assert self.zero_stage in (0, 1, 2, 3)
-        assert self.zero_scope in ("global", "pod")
-        assert self.partition_mode in ("allgather", "broadcast")
-        assert self.attn_strategy in ("auto", "tp", "cp")
-        assert self.remat in ("full", "dots", "none")
-        assert self.grad_compression in ("none", "int8")
-        assert self.engine in ("pjit", "zero3")
+        c = "ParallelConfig"
+        _require_choice(c, "zero_stage", self.zero_stage, (0, 1, 2, 3))
+        _require_choice(c, "zero_scope", self.zero_scope, ("global", "pod"))
+        _require_choice(c, "partition_mode", self.partition_mode,
+                        ("allgather", "broadcast"))
+        _require_choice(c, "attn_strategy", self.attn_strategy,
+                        ("auto", "tp", "cp"))
+        _require_choice(c, "remat", self.remat, ("full", "dots", "none"))
+        _require_choice(c, "grad_compression", self.grad_compression,
+                        ("none", "int8"))
+        _require_choice(c, "engine", self.engine, ("pjit", "zero3"))
+        _require_min(c, "grad_accum", self.grad_accum, 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,12 +153,16 @@ class OffloadConfig:
     nvme_workers: int = 2  # worker threads per slow-tier store
 
     def __post_init__(self):
-        for t in (self.param_tier, self.grad_tier, self.opt_tier):
-            assert t in ("device", "host", "nvme"), t
-        assert self.act_tier in ("device", "host")
-        assert self.param_read_ahead >= 1
-        assert self.prefetch_layers >= 0
-        assert self.nvme_workers >= 1
+        c = "OffloadConfig"
+        tiers = ("device", "host", "nvme")
+        _require_choice(c, "param_tier", self.param_tier, tiers)
+        _require_choice(c, "grad_tier", self.grad_tier, tiers)
+        _require_choice(c, "opt_tier", self.opt_tier, tiers)
+        _require_choice(c, "act_tier", self.act_tier, ("device", "host"))
+        _require_min(c, "param_read_ahead", self.param_read_ahead, 1)
+        _require_min(c, "prefetch_layers", self.prefetch_layers, 0)
+        _require_min(c, "nvme_workers", self.nvme_workers, 1)
+        _require_min(c, "pinned_buffer_mb", self.pinned_buffer_mb, 1)
 
     @property
     def opt_offgraph(self) -> bool:
@@ -161,15 +186,28 @@ def make_parallel(engine: str = "pjit", **kw) -> ParallelConfig:
     return ParallelConfig(engine=engine, **kw)
 
 
-def make_offload(tier: str = "device", *, param_tier: str = "device",
-                 grad_tier: str = "device", **kw) -> OffloadConfig:
+def make_offload(tier: Optional[str] = None, *, opt_tier: Optional[str] = None,
+                 param_tier: str = "device", grad_tier: str = "device",
+                 **kw) -> OffloadConfig:
     """Tier selection with identical meaning for both engines.
 
-    ``tier`` is the optimizer tier (the original single knob);
-    ``param_tier`` / ``grad_tier`` place the other two state classes
-    independently (`device` | `host` | `nvme` each).
+    .. deprecated::
+        The positional ``tier`` means the *optimizer* tier — a recurring
+        confusion. Pass ``opt_tier=`` explicitly, or better: derive the
+        whole placement from hardware with ``repro.plan.plan_run(...)`` and
+        lower via ``InfinityPlan.to_run_config()``.
     """
-    return OffloadConfig(opt_tier=tier, param_tier=param_tier,
+    if tier is not None:
+        if opt_tier is not None:
+            raise ValueError(
+                "make_offload: pass either the deprecated positional `tier` "
+                "or `opt_tier=`, not both")
+        _warnings.warn(
+            "make_offload(tier): the positional `tier` means the OPTIMIZER "
+            "tier; use opt_tier= (or derive the placement with "
+            "repro.plan.plan_run)", DeprecationWarning, stacklevel=2)
+        opt_tier = tier
+    return OffloadConfig(opt_tier=opt_tier or "device", param_tier=param_tier,
                          grad_tier=grad_tier, **kw)
 
 
@@ -197,7 +235,8 @@ class ShapeConfig:
     kind: str  # train | prefill | decode
 
     def __post_init__(self):
-        assert self.kind in ("train", "prefill", "decode")
+        _require_choice("ShapeConfig", "kind", self.kind,
+                        ("train", "prefill", "decode"))
 
 
 # The assigned input-shape set (identical for all 10 LM-family archs).

@@ -103,9 +103,13 @@ class InfinityExecutor:
     that tier's measured per-step bandwidth counters.
     """
 
-    def __init__(self, run: RunConfig, mesh, *, engine: Optional[EngineProtocol] = None):
+    def __init__(self, run: RunConfig, mesh, *,
+                 engine: Optional[EngineProtocol] = None, plan=None):
         self.run = run
         self.mesh = mesh
+        # optional repro.plan.InfinityPlan: its predictions are cross-checked
+        # against the measured counters and reported in step metrics
+        self.plan = plan
         self.engine = engine if engine is not None else make_engine(run, mesh)
         self.is_explicit = isinstance(self.engine, ExplicitZero3Engine)
         off = run.offload
@@ -628,13 +632,16 @@ class InfinityExecutor:
             # ---- head + reversed layer pass ----
             loss, dx, g_head = fns["head"](x, state["other"], batch["labels"])
             gdict: Dict[str, object] = {}
-            sumsq = 0.0
+            # grad-norm sum-of-squares accumulates ON DEVICE: one psum per
+            # layer folded into a carried scalar, consumed directly by the
+            # jitted `finish` — no per-layer host-float synchronization
+            sumsq = jnp.zeros((), jnp.float32)
 
             def bwd_use(layer):
                 nonlocal dx, sumsq
                 dx, g_row = fns["layer_vjp"](acts.pop(layer), rows[layer], dx)
+                sumsq = fns["accum_sumsq"](sumsq, g_row)
                 for r, g in self._rank_arrays(g_row).items():
-                    sumsq += float(np.sum(np.square(g, dtype=np.float32)))
                     key = f"rank{r}/l{layer}"
                     gdict[key] = (self.grad_store.roundtrip(f"{key}/g", g)
                                   if self.grad_offload else g)
@@ -644,7 +651,7 @@ class InfinityExecutor:
             g_emb = fns["embed_vjp"](state["other"], batch["tokens"], dx)
             new_other, new_other_opt, new_step, fm = fns["finish"](
                 state["other"], state["other_opt"], state["step"],
-                g_head, g_emb, jnp.float32(sumsq))
+                g_head, g_emb, sumsq)
 
             # streamed per-layer Adam; updated bf16 rows go straight back
             new_master = self.offload.step(
@@ -755,6 +762,34 @@ class InfinityExecutor:
         if self.param_nvme:  # scheduler residency / overlap effectiveness
             out.update(self._ws.stats())
             out["param_total_bytes"] = self.total_param_bytes
+        return self._with_plan_crosscheck(out)
+
+    def _with_plan_crosscheck(self, out: dict) -> dict:
+        """Predicted-vs-measured: when this executor was built from an
+        ``InfinityPlan``, surface the plan's predictions next to the step's
+        measured counters so drift is visible in every metrics row. The
+        residency claim is directional — measured peak must stay at or below
+        what the planner budgeted — so it also gets a pass/fail flag."""
+        if self.plan is None:
+            return out
+        pred = self.plan.predictions
+        pp = pred.get("peak_resident_param_bytes")
+        if pp is not None:
+            out["plan_peak_resident_param_bytes"] = pp
+            if "peak_resident_param_bytes" in out:
+                out["plan_residency_ok"] = bool(
+                    out["peak_resident_param_bytes"] <= pp)
+        if "efficiency" in pred:
+            out["plan_efficiency"] = pred["efficiency"]
+        for cls_, measured_keys in (
+                ("param", ("param_in_bytes", "param_out_bytes")),
+                ("grad", ("grad_out_bytes",)),
+                ("opt", ("opt_read_bytes", "opt_write_bytes"))):
+            pred_rw = [pred.get(f"{cls_}_step_read_bytes"),
+                       pred.get(f"{cls_}_step_write_bytes")]
+            total_pred = sum(v for v in pred_rw if v is not None)
+            if total_pred and any(k in out for k in measured_keys):
+                out[f"plan_{cls_}_step_bytes"] = total_pred
         return out
 
     def bandwidth_stats(self) -> dict:

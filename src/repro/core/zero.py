@@ -492,6 +492,14 @@ class ExplicitZero3Engine:
             g_other = jax.tree.map(lambda g: jax.lax.psum(g, axis), g_other)
             return loss, dx, g_other
 
+        def _accum_sumsq(acc, row):
+            # device-side grad-norm accumulation: the layered backward adds
+            # each row's global sum-of-squares into a carried device scalar
+            # (one psum per layer) instead of pulling a host float per layer
+            # — the accumulation stays async until `finish` consumes it.
+            return acc + jax.lax.psum(
+                jnp.sum(row.astype(jnp.float32) ** 2), axis)
+
         def _embed_vjp(other, tokens, dx0):
             _, vjp = jax.vjp(
                 lambda o: cm.embed(o["embed"], tokens, cfg, rules), other)
@@ -517,6 +525,7 @@ class ExplicitZero3Engine:
             "layer_fwd": smap(_layer_fwd, (xspec, rowspec), xspec),
             "layer_vjp": smap(_layer_vjp, (xspec, rowspec, xspec),
                               (xspec, rowspec)),
+            "accum_sumsq": smap(_accum_sumsq, (rep, rowspec), rep),
             "head": smap(_head, (xspec, other_specs, bspec),
                          (rep, xspec, other_specs)),
             "embed_vjp": smap(_embed_vjp, (other_specs, bspec, xspec),

@@ -24,6 +24,8 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell, cached
   PYTHONPATH=src python -m repro.launch.dryrun --smoke-exec --engine zero3 \
       --arch smollm-135m --offload-param nvme --prefetch-layers 2
+  PYTHONPATH=src python -m repro.launch.dryrun --smoke-exec --plan auto \
+      --hw-device-mem 1e6 --hw-host-mem 2e6   # planner-derived tiers + gate
 """
 
 import argparse
@@ -34,7 +36,9 @@ import traceback
 import jax
 
 from repro import compat, configs
-from repro.config import RunConfig, ParallelConfig, OffloadConfig, SHAPES
+from repro import plan as plan_mod
+from repro.config import (RunConfig, ParallelConfig, OffloadConfig, SHAPES,
+                          ShapeConfig)
 from repro.core import model_math
 from repro.core.engine import ZeroInfinityEngine
 from repro.launch.mesh import make_production_mesh
@@ -62,12 +66,19 @@ def model_flops_for(bundle, shape) -> float:
     return model_math.decode_model_flops(n, shape.global_batch)  # 1 new token/seq
 
 
+def cell_result_path(out_dir: str, mesh_name: str, arch: str,
+                     shape_name: str, tag: str = "") -> str:
+    """The one place the per-cell result filename is built — the sweep's
+    cached-cell check and run_cell's cache short-circuit must agree."""
+    return os.path.join(out_dir, f"{mesh_name}__{arch}__{shape_name}{tag}.json")
+
+
 def run_cell(arch: str, shape_name: str, mesh_name: str, *,
              parallel: ParallelConfig, offload: OffloadConfig,
              out_dir: str, force: bool = False, tag: str = "",
-             model_overrides: dict | None = None) -> dict:
+             model_overrides: dict | None = None, plan=None) -> dict:
     os.makedirs(out_dir, exist_ok=True)
-    path = os.path.join(out_dir, f"{mesh_name}__{arch}__{shape_name}{tag}.json")
+    path = cell_result_path(out_dir, mesh_name, arch, shape_name, tag)
     if os.path.exists(path) and not force:
         with open(path) as f:
             return json.load(f)
@@ -93,6 +104,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
            "n_chips": n_chips, "parallel": parallel.__dict__ | {},
            "status": "error"}
+    if plan is not None:  # record WHY this cell's config was chosen
+        rec["plan"] = json.loads(plan.to_json())
     t0 = time.time()
     try:
         if parallel.engine == "zero3":
@@ -140,7 +153,11 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
 def smoke_exec(args) -> None:
     """Tier-1 CI gate: run real steps with the configured tiers on the smoke
     config and, for NVMe-resident params, assert the layer scheduler keeps
-    peak residency strictly below total param bytes."""
+    peak residency strictly below total param bytes. With ``--plan auto``
+    the tiers come from the planner instead of flags and the gate
+    additionally asserts the emitted plan is feasible for the (detected or
+    ``--hw-*``-overridden) hardware and that measured peak residency stays
+    at or below the planner's prediction."""
     import dataclasses
     import tempfile
 
@@ -153,17 +170,25 @@ def smoke_exec(args) -> None:
 
     cfg = dataclasses.replace(configs.smoke(args.arch or "smollm-135m"),
                               n_layers=args.exec_layers)
-    run = RunConfig(
-        model=cfg, parallel=make_parallel(args.engine, remat="none"),
-        offload=make_offload(args.offload, param_tier=args.offload_param,
-                             grad_tier=args.offload_grad,
-                             nvme_dir=tempfile.mkdtemp(prefix="repro_smoke_nvme"),
-                             prefetch_layers=args.prefetch_layers,
-                             param_read_ahead=args.read_ahead,
-                             nvme_workers=args.nvme_workers),
-        train=TrainConfig(lr=3e-3, warmup_steps=2))
+    nvme_dir = tempfile.mkdtemp(prefix="repro_smoke_nvme")
+    tc = TrainConfig(lr=3e-3, warmup_steps=2)
+    shape = ShapeConfig("smoke-exec", 16, 2, "train")
+    plan = plan_mod.resolve_plan(args, cfg, shape, nvme_dir=nvme_dir)
+    if plan is not None:
+        run = plan.to_run_config(train=tc, nvme_dir=nvme_dir)
+    else:
+        run = RunConfig(
+            model=cfg, parallel=make_parallel(args.engine, remat="none"),
+            offload=make_offload(opt_tier=args.offload,
+                                 param_tier=args.offload_param,
+                                 grad_tier=args.offload_grad,
+                                 nvme_dir=nvme_dir,
+                                 prefetch_layers=args.prefetch_layers,
+                                 param_read_ahead=args.read_ahead,
+                                 nvme_workers=args.nvme_workers),
+            train=tc)
     mesh = make_local_mesh(1, 1)
-    ex = InfinityExecutor(run, mesh)
+    ex = InfinityExecutor(run, mesh, plan=plan)
     state = ex.init_state(jax.random.PRNGKey(0))
     batch = {"tokens": jnp.ones((2, 16), jnp.int32),
              "labels": jnp.ones((2, 16), jnp.int32)}
@@ -173,12 +198,27 @@ def smoke_exec(args) -> None:
         state, metrics = step(state, batch)
     peak = int(metrics.get("peak_resident_param_bytes", -1))
     total = ex.total_param_bytes
-    print(f"smoke-exec: loss={float(metrics['loss']):.4f} "
+    engine = run.parallel.engine
+    param_tier = run.offload.param_tier
+    print(f"smoke-exec: engine={engine} param_tier={param_tier} "
+          f"loss={float(metrics['loss']):.4f} "
           f"peak_resident_param_bytes={peak} total_param_bytes={total} "
           f"prefetch_hit_rate={metrics.get('prefetch_hit_rate')} "
           f"evictions={metrics.get('evictions')}")
-    if args.offload_param == "nvme":
-        if args.engine != "zero3":
+    if plan is not None:
+        if not plan.feasible:
+            raise SystemExit("plan gate: emitted plan is INFEASIBLE for the "
+                             "specified hardware: " + "; ".join(plan.warnings))
+        pred = plan.predictions["peak_resident_param_bytes"]
+        if peak >= 0 and peak > pred:
+            raise SystemExit(
+                f"plan gate: measured peak residency {peak} exceeds the "
+                f"planner's prediction {pred:.0f}")
+        print(f"plan gate: feasible=True measured_peak={peak} "
+              f"predicted_peak={pred:.0f} "
+              f"residency_ok={metrics.get('plan_residency_ok', 'n/a')}")
+    if param_tier == "nvme":
+        if engine != "zero3":
             # the pjit engine's scheduler bounds host *staging* only — its
             # jit step still assembles every leaf on device, so the strict
             # device-residency bound is a zero3 (layered-epoch) claim
@@ -188,9 +228,12 @@ def smoke_exec(args) -> None:
                 raise SystemExit("host staging exceeded total param bytes")
             return
         # strictly below total whenever the window is smaller than the model
-        # (a 1-layer model's window necessarily equals full residency)
-        window = args.prefetch_layers or cfg.n_layers - 1
-        bound = total if min(window, cfg.n_layers) >= cfg.n_layers else total - 1
+        # (a 1-layer model's window necessarily equals full residency);
+        # bound against the model the executor actually ran (a loaded plan
+        # embeds its own ModelConfig)
+        nl = run.model.n_layers
+        window = run.offload.prefetch_layers or nl - 1
+        bound = total if min(window, nl) >= nl else total - 1
         if not 0 <= peak <= bound:
             raise SystemExit(
                 f"layer scheduler violated the residency bound: peak {peak} "
@@ -242,6 +285,7 @@ def main() -> None:
                     help="layer count override under --smoke-exec (must "
                          "exceed the window for a strict residency bound)")
     ap.add_argument("--tag", default="", help="suffix for the result file")
+    plan_mod.add_plan_args(ap)
     args = ap.parse_args()
 
     if args.smoke_exec:
@@ -270,13 +314,63 @@ def main() -> None:
         overrides["attn_chunk"] = args.attn_chunk
 
     n_ok = n_skip = n_err = 0
+    # one hardware probe for the whole sweep, not one per cell
+    plan_hw = (plan_mod.hardware_from_args(args)
+               if args.plan == "auto" else None)
     for mesh_name in meshes:
         for arch in archs:
             for shape_name in shapes:
-                rec = run_cell(arch, shape_name, mesh_name, parallel=parallel,
-                               offload=offload, out_dir=args.out,
+                cell_parallel, cell_offload, cell_plan = parallel, offload, None
+                cell_path = cell_result_path(args.out, mesh_name, arch,
+                                             shape_name, args.tag)
+                cached = os.path.exists(cell_path) and not args.force
+                # cached cells short-circuit in run_cell: don't plan for
+                # them, and never let a plan error clobber a cached record
+                if args.plan != "manual" and not cached:
+                    # per-cell plan: the tiers/engine/window/remat come from
+                    # the hardware arithmetic; non-plan parallelism knobs
+                    # (zero scope/stage, tiling, MoE) stay CLI-driven. Plan
+                    # on the SAME model the cell will run (incl. overrides).
+                    import dataclasses as _dc
+                    cell_cfg = configs.get(arch)
+                    if overrides:
+                        cell_cfg = _dc.replace(cell_cfg, **overrides)
+                    try:
+                        cell_plan = plan_mod.resolve_plan(
+                            args, cell_cfg, SHAPES[shape_name],
+                            quiet=True, hardware=plan_hw)
+                    except ValueError as e:
+                        # an override this cell cannot honor (e.g. a forced
+                        # zero3 engine on a non-dense arch) is a per-cell
+                        # error, not a sweep abort
+                        rec = {"arch": arch, "shape": shape_name,
+                               "mesh": mesh_name, "status": "error",
+                               "error": f"plan: {e}"}
+                        os.makedirs(args.out, exist_ok=True)
+                        with open(cell_path, "w") as f:
+                            json.dump(rec, f, indent=1)
+                        n_err += 1
+                        print(f"[{mesh_name}] {arch:24s} {shape_name:12s} "
+                              f"error    {rec['error'][:120]}", flush=True)
+                        continue
+                    rc = cell_plan.to_run_config()
+                    cell_parallel = _dc.replace(
+                        rc.parallel, zero_stage=args.zero_stage,
+                        zero_scope=args.zero_scope,
+                        tiling_factor=args.tiling,
+                        moe_zero_stage=args.moe_zero_stage,
+                        prefetch=args.prefetch,
+                        pure_dp=args.pure_dp or rc.parallel.pure_dp)
+                    cell_offload = rc.offload
+                    for w in cell_plan.warnings:
+                        print(f"[{mesh_name}] {arch} {shape_name} "
+                              f"PLAN WARNING: {w}")
+                rec = run_cell(arch, shape_name, mesh_name,
+                               parallel=cell_parallel,
+                               offload=cell_offload, out_dir=args.out,
                                force=args.force, tag=args.tag,
-                               model_overrides=overrides or None)
+                               model_overrides=overrides or None,
+                               plan=cell_plan)
                 st = rec["status"]
                 n_ok += st == "ok"
                 n_skip += st == "skipped"

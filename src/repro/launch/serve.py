@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat, configs
+from repro import plan as plan_mod
 from repro.config import ParallelConfig, RunConfig, ShapeConfig
 from repro.core.engine import ZeroInfinityEngine
 from repro.launch.mesh import make_local_mesh
@@ -34,10 +35,20 @@ def main() -> None:
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    plan_mod.add_plan_args(ap)
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
-    run = RunConfig(model=cfg, parallel=ParallelConfig(remat="none"))
+    plan = plan_mod.resolve_plan(
+        args, cfg, ShapeConfig("serve-plan", args.prompt_len, args.batch,
+                               "prefill"))
+    if plan is not None:
+        # serving uses the GSPMD engine's prefill/decode paths; the plan
+        # contributes the memory-derived knobs (remat is always "none" for
+        # non-train shapes, so this matches the legacy construction)
+        run = plan.to_run_config()
+    else:
+        run = RunConfig(model=cfg, parallel=ParallelConfig(remat="none"))
     mesh = make_local_mesh(args.data_mesh, args.model_mesh)
     eng = ZeroInfinityEngine(run, mesh)
     state = eng.init_state(jax.random.PRNGKey(args.seed))

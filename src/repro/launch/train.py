@@ -20,6 +20,7 @@ import time
 import jax
 
 from repro import compat, configs
+from repro import plan as plan_mod
 from repro.checkpoint.manager import CheckpointManager
 from repro.config import (RunConfig, ShapeConfig, TrainConfig, make_offload,
                           make_parallel)
@@ -60,6 +61,9 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="slow-tier param reads in flight beyond the window")
     ap.add_argument("--nvme-workers", type=int, default=2,
                     help="worker threads per slow-tier store")
+    ap.add_argument("--pinned-buffer-mb", type=int, default=64,
+                    help="shared pinned buffer-pool budget (all stores)")
+    plan_mod.add_plan_args(ap)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", default="no", choices=["no", "auto"])
@@ -68,28 +72,47 @@ def build_argparser() -> argparse.ArgumentParser:
     return ap
 
 
-def make_run(args) -> RunConfig:
+def make_run(args):
+    """(RunConfig, Optional[InfinityPlan]). With ``--plan auto`` the planner
+    derives every offload/engine knob from the (detected) hardware and the
+    legacy flags only act as explicit per-field overrides; ``--plan manual``
+    (default) keeps the hand-tuned path byte-for-byte."""
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
-    return RunConfig(
+    tc = TrainConfig(lr=args.lr, steps=args.steps, checkpoint_dir=args.ckpt_dir,
+                     checkpoint_every=args.ckpt_every, seed=args.seed)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    plan = plan_mod.resolve_plan(args, cfg, shape, nvme_dir=args.nvme_dir)
+    if plan is not None:
+        import dataclasses
+
+        run = plan.to_run_config(train=tc, nvme_dir=args.nvme_dir,
+                                 overlap=not args.no_overlap)
+        # non-plan parallelism knobs stay CLI-driven under --plan auto
+        run = run.replace(parallel=dataclasses.replace(
+            run.parallel, zero_stage=args.zero_stage))
+        return run, plan
+    run = RunConfig(
         model=cfg,
         parallel=make_parallel(args.engine, zero_stage=args.zero_stage,
                                grad_accum=args.grad_accum),
-        offload=make_offload(args.offload_opt, param_tier=args.offload_param,
+        offload=make_offload(opt_tier=args.offload_opt,
+                             param_tier=args.offload_param,
                              grad_tier=args.offload_grad, nvme_dir=args.nvme_dir,
                              overlap=not args.no_overlap,
                              prefetch_layers=args.prefetch_layers,
                              param_read_ahead=args.read_ahead,
-                             nvme_workers=args.nvme_workers),
-        train=TrainConfig(lr=args.lr, steps=args.steps, checkpoint_dir=args.ckpt_dir,
-                          checkpoint_every=args.ckpt_every, seed=args.seed),
+                             nvme_workers=args.nvme_workers,
+                             pinned_buffer_mb=args.pinned_buffer_mb),
+        train=tc,
     )
+    return run, None
 
 
 def train(args) -> dict:
     maybe_init_distributed()
-    run = make_run(args)
+    run, plan = make_run(args)
     mesh = make_local_mesh(args.data_mesh, args.model_mesh)
-    executor = InfinityExecutor(run, mesh)
+    executor = InfinityExecutor(run, mesh, plan=plan)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
 
     ckpt = CheckpointManager(run.train.checkpoint_dir, keep=run.train.keep_checkpoints)

@@ -92,7 +92,7 @@ def _make_executor(env, engine, tiers, nvme_dir):
     cfg, mesh, _ = env
     param, grad, opt = tiers
     run = RunConfig(model=cfg, parallel=make_parallel(engine, remat="none"),
-                    offload=make_offload(opt, param_tier=param, grad_tier=grad,
+                    offload=make_offload(opt_tier=opt, param_tier=param, grad_tier=grad,
                                          nvme_dir=str(nvme_dir)),
                     train=TrainConfig(lr=3e-3, warmup_steps=2))
     return InfinityExecutor(run, mesh)

@@ -39,7 +39,7 @@ def _run_tiers(mesh, engine, nvme_dir, *, param="device", grad="device",
     cfg = _tiny_cfg()
     # remat="none": smallest autodiff graph -> fastest CPU compile (tier-1)
     run = RunConfig(model=cfg, parallel=make_parallel(engine, remat="none"),
-                    offload=make_offload(opt, param_tier=param, grad_tier=grad,
+                    offload=make_offload(opt_tier=opt, param_tier=param, grad_tier=grad,
                                          nvme_dir=str(nvme_dir)),
                     train=TrainConfig(lr=3e-3, warmup_steps=2))
     ex = InfinityExecutor(run, mesh)

@@ -144,7 +144,7 @@ def _run(env, nvme_dir, *, param="device", window=0, steps=3):
     mesh, cfg, batch = env
     tiers = (param,) * 3 if param == "nvme" else ("device",) * 3
     run = RunConfig(model=cfg, parallel=make_parallel("zero3", remat="none"),
-                    offload=make_offload(tiers[2], param_tier=tiers[0],
+                    offload=make_offload(opt_tier=tiers[2], param_tier=tiers[0],
                                          grad_tier=tiers[1],
                                          nvme_dir=str(nvme_dir),
                                          prefetch_layers=window),
@@ -208,7 +208,7 @@ def test_layered_single_layer_model(sched_env, tmp_path):
     mesh, cfg, batch = sched_env
     cfg1 = dataclasses.replace(cfg, n_layers=1)
     run = RunConfig(model=cfg1, parallel=make_parallel("zero3", remat="none"),
-                    offload=make_offload("nvme", param_tier="nvme",
+                    offload=make_offload(opt_tier="nvme", param_tier="nvme",
                                          grad_tier="nvme",
                                          nvme_dir=str(tmp_path / "l1")),
                     train=TrainConfig(lr=3e-3, warmup_steps=2))
@@ -229,7 +229,7 @@ def test_layered_rejects_broadcast_mode_at_construction(sched_env, tmp_path):
     run = RunConfig(model=cfg,
                     parallel=make_parallel("zero3", remat="none",
                                            partition_mode="broadcast"),
-                    offload=make_offload("nvme", param_tier="nvme",
+                    offload=make_offload(opt_tier="nvme", param_tier="nvme",
                                          nvme_dir=str(tmp_path / "bc")))
     with pytest.raises(ValueError, match="allgather"):
         InfinityExecutor(run, mesh)
