@@ -379,6 +379,44 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
 
 
 # ---------------------------------------------------------------------------
+# Serving: continuous-batching decode with KV paged through the host tier vs
+# the all-device baseline (measured — tok/s, KV stream rates, residency)
+# ---------------------------------------------------------------------------
+
+def serving_micro() -> None:
+    from repro.launch import serve as serve_mod
+
+    n_seqs = 6
+    base = ["--arch", "smollm-135m", "--smoke", "--batch", str(n_seqs),
+            "--prompt-len", "32", "--new-tokens", "8"]
+    cells = {
+        "device_slots6": base + ["--kv-slots", str(n_seqs)],
+        "host_slots2": base + ["--kv-tier", "host", "--kv-slots", "2"],
+    }
+    outs = {}
+    for name, argv in cells.items():
+        out = serve_mod.run_serve(serve_mod._parse(argv), argv)
+        outs[name] = out
+        t = out["timings"]
+        dec = sum(len(g) for g in out["generated"]) - n_seqs
+        emit(f"serving/{name}/decode_tok_s",
+             t["decode_s"] / max(out["steps"], 1) * 1e6,
+             f"{dec / max(t['decode_s'], 1e-9):.0f}")
+        emit(f"serving/{name}/compile_s", 0.0,
+             f"{t['compile_prefill_s'] + t['compile_decode_s']:.2f}")
+        emit(f"serving/{name}/kv_resident_bytes", 0.0,
+             out["kv"]["resident_bytes"])
+        emit(f"serving/{name}/admissions", 0.0, out["admissions"])
+        if out["history"]:
+            emit(f"serving/{name}/kv_in_gbps_peak", 0.0,
+                 f"{max(r['kv_in_gbps'] for r in out['history']):.3f}")
+            emit(f"serving/{name}/kv_out_gbps_peak", 0.0,
+                 f"{max(r['kv_out_gbps'] for r in out['history']):.3f}")
+    emit("serving/paged_matches_device", 0.0,
+         outs["host_slots2"]["generated"] == outs["device_slots6"]["generated"])
+
+
+# ---------------------------------------------------------------------------
 # Kernel microbenches (interpret mode — correctness-path timing)
 # ---------------------------------------------------------------------------
 
@@ -460,6 +498,7 @@ BENCHES = {
     "fig6d": fig6d_overlap,
     "fig6e": fig6e_act_offload,
     "micro": train_step_micro,
+    "serving": serving_micro,
     "executor": executor_micro,
     "kernels": kernels_micro,
     "roofline": roofline_table,

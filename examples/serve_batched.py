@@ -1,4 +1,6 @@
-"""Batched serving with a KV cache: prefill a prompt batch, decode greedily.
+"""Continuous-batching serving with a paged KV cache: 5 sequences decode
+through 2 device slots; waiting sequences park on the pinned-host tier as
+fixed-size KV blocks and stream back in when a slot frees up.
 
     PYTHONPATH=src python examples/serve_batched.py --arch recurrentgemma-9b
 (any of the 10 assigned arch ids; reduced smoke config on CPU)
@@ -14,9 +16,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-370m")
     args = ap.parse_args()
-    sys.argv = ["serve", "--arch", args.arch, "--smoke", "--batch", "2",
-                "--prompt-len", "24", "--new-tokens", "12"]
-    serve.main()
+    serve.main(["--arch", args.arch, "--smoke", "--batch", "5",
+                "--kv-slots", "2", "--kv-tier", "host",
+                "--prompt-len", "24", "--new-tokens", "12"])
 
 
 if __name__ == "__main__":

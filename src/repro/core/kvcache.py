@@ -1,0 +1,290 @@
+"""Paged KV-cache blocks through the tier hierarchy (serving-side paper
+Secs. 3-4).
+
+Training streams parameters/gradients/optimizer states through the
+device/host/NVMe tiers; serving's analogous state is the per-sequence KV
+cache. This module applies the same machinery to it:
+
+  * ``pad_seq_caches`` — the one shared cache-growth helper (serve driver
+    and tests): grows dense-style K/V leaves along the sequence axis and
+    leaves everything else (enc-dec cross-attention K/V, SSM states, ring
+    buffers, lengths) untouched.
+  * ``PagedKVCache`` — per-sequence KV state parked in an ``ArrayStore``
+    tier (pinned host DRAM or NVMe) as fixed-size token blocks along the
+    cache's sequence axis. Parking stores only ``ceil(len/block)`` blocks —
+    capacity padding never moves through the link — and fetching streams the
+    blocks back with a bounded read-ahead window (the overlap-centric
+    pattern of ``ParamStreamer.load_all``), staged through the store's
+    shared ``PinnedBufferPool``. Leaves without a sequence axis (enc-dec
+    ``xk``/``xv``, mamba2 state, rglru rings) are parked whole, so paging
+    degrades gracefully to whole-state offload for fixed-size caches.
+  * byte arithmetic (``sequence_kv_bytes`` / ``device_kv_bytes`` /
+    ``default_block_tokens``) shared with the planner: the same Sec. 3
+    accounting that sizes parameter tiers sizes the KV tier.
+
+Sequence-axis convention: a pageable leaf is a 5-dim ``(layers, batch, seq,
+kv_heads, head_dim)`` array whose pytree key is in ``seq_axis_names``
+(``k``/``v`` across the dense/moe/vlm/encdec families); the batch axis of
+every non-scalar cache leaf is axis 1 across all families.
+"""
+from __future__ import annotations
+
+import collections
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.offload import ArrayStore
+
+SEQ_AXIS = 2  # (layers, batch, seq, kv_heads, head_dim)
+BATCH_AXIS = 1
+
+# families whose decode cache grows along a sequence axis (the rest hold
+# fixed-size state: SSM scan state, conv tails, ring-buffer windows)
+SEQ_CACHE_FAMILIES = ("dense", "moe", "vlm", "encdec")
+
+
+def _path_key(entry) -> Optional[str]:
+    return entry.key if hasattr(entry, "key") else None
+
+
+def pad_seq_caches(cache, extra: int, seq_axis_names: Tuple[str, ...] = ("k", "v")):
+    """Grow dense-style K/V caches by ``extra`` slots along the seq axis.
+
+    Path-aware: only 5-dim leaves keyed ``k``/``v`` grow. Enc-dec
+    cross-attention leaves (``xk``/``xv``) must NOT grow — their length is
+    the encoder's, and zero-padding them would add phantom keys that
+    receive attention weight.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if extra <= 0:
+        return cache
+
+    def grow(path, leaf):
+        key = _path_key(path[-1]) if path else None
+        if key in seq_axis_names and hasattr(leaf, "ndim") and leaf.ndim == 5:
+            return jnp.pad(leaf, ((0, 0), (0, 0), (0, extra), (0, 0), (0, 0)))
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(grow, cache)
+
+
+def grow_cache(cache, extra: int, family: str):
+    """Serve-driver growth: seq-cache families pad K/V to decode capacity;
+    fixed-state families (ssm/hybrid) pass through unchanged."""
+    if family in SEQ_CACHE_FAMILIES:
+        return pad_seq_caches(cache, extra)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Sec. 3 byte arithmetic for the KV tier (shared with repro.plan)
+# ---------------------------------------------------------------------------
+
+
+def sequence_kv_bytes(model, cache_len: int) -> int:
+    """Bytes of ONE sequence's decode cache at ``cache_len`` context —
+    evaluated on the family's actual ``cache_defs`` leaves (the registry
+    knows every leaf), not an nl*hd approximation."""
+    import jax
+
+    from repro.core import partition as pt
+    from repro.models import registry
+
+    defs = registry.build(model).cache_defs(1, cache_len)
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, pt.ParamDef))
+    total = 0
+    for l in leaves:
+        n = 1
+        for s in l.shape:
+            n *= int(s)
+        total += n * int(np.dtype(l.dtype).itemsize)
+    return total
+
+
+def device_kv_bytes(cache) -> int:
+    """Resident bytes of a live cache pytree (all array leaves; the scalar/
+    vector ``len`` leaf is counted too — it is part of the cache)."""
+    import jax
+
+    return int(sum(int(l.nbytes) for l in jax.tree.leaves(cache)
+                   if hasattr(l, "nbytes")))
+
+
+def default_block_tokens(cache_len: int) -> int:
+    """Fixed block size: ~1/8 of the context rounded up to a power of two,
+    clamped to [16, 1024] — big enough to amortize per-request overhead,
+    small enough that a short sequence doesn't ship its padding."""
+    if cache_len <= 16:
+        return 16
+    target = max(16, cache_len // 8)
+    return int(min(1024, 1 << math.ceil(math.log2(target))))
+
+
+# ---------------------------------------------------------------------------
+# the paged store
+# ---------------------------------------------------------------------------
+
+
+class PagedKVCache:
+    """Per-sequence KV state parked as fixed-size blocks in an ArrayStore.
+
+    ``park(seq_id, cache, length)`` slices a single-sequence cache pytree
+    (batch dim 1) into ``ceil(length/block_tokens)`` blocks along the seq
+    axis for pageable leaves and whole arrays for the rest, written
+    asynchronously. ``fetch(seq_id, cache_len)`` streams the blocks back
+    with at most ``prefetch_blocks`` reads in flight and reassembles the
+    cache zero-padded to ``cache_len`` capacity. ``drop`` deletes a finished
+    sequence's blocks so the slow tier holds only live sequences.
+
+    Bandwidth accounting rides on the store's ``mark``/``delta_since``
+    counters (fetch = ``kv_in``, park = ``kv_out`` in step metrics).
+    """
+
+    def __init__(self, store: ArrayStore, *, block_tokens: int,
+                 seq_axis_names: Tuple[str, ...] = ("k", "v"),
+                 prefetch_blocks: int = 2):
+        if block_tokens < 1:
+            raise ValueError(f"block_tokens={block_tokens}: must be >= 1")
+        self.store = store
+        self.block_tokens = int(block_tokens)
+        self.seq_axis_names = tuple(seq_axis_names)
+        self.prefetch_blocks = max(1, int(prefetch_blocks))
+        # seq_id -> (treedef, length, [(pathstr, n_blocks_or_0, trailing_pad_shape)], bytes)
+        self._layout: Dict[str, tuple] = {}
+
+    # -- helpers ------------------------------------------------------------
+
+    def _is_seq_leaf(self, path, leaf) -> bool:
+        key = _path_key(path[-1]) if path else None
+        return key in self.seq_axis_names and getattr(leaf, "ndim", 0) == 5
+
+    @staticmethod
+    def _pathstr(path) -> str:
+        return "/".join(str(getattr(p, "key", p)) for p in path)
+
+    def n_blocks(self, length: int) -> int:
+        return max(1, -(-int(length) // self.block_tokens))
+
+    # -- park / fetch / drop ------------------------------------------------
+
+    def park(self, seq_id: str, cache, length: int) -> int:
+        """Write one sequence's cache (batch dim 1, no live padding beyond
+        ``length`` along the seq axis is shipped). Returns bytes written.
+        Asynchronous — ``flush()`` (or the next ``fetch``) commits."""
+        import jax
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+        entries: List[tuple] = []
+        nbytes = 0
+        bt = self.block_tokens
+        for path, leaf in flat:
+            arr = np.asarray(leaf)
+            ps = self._pathstr(path)
+            if self._is_seq_leaf(path, leaf):
+                nb = self.n_blocks(length)
+                for i in range(nb):
+                    blk = arr[:, :, i * bt: min((i + 1) * bt, int(length))]
+                    self.store.write(f"{seq_id}/{ps}/b{i}", blk)
+                    nbytes += blk.nbytes
+                entries.append((ps, nb, arr.shape))
+            else:
+                self.store.write(f"{seq_id}/{ps}/full", arr)
+                nbytes += arr.nbytes
+                entries.append((ps, 0, arr.shape))
+        self._layout[seq_id] = (treedef, int(length), entries, nbytes)
+        return nbytes
+
+    def fetch(self, seq_id: str, cache_len: int):
+        """Windowed read-back; returns ``(cache_pytree, length)`` with seq
+        leaves zero-padded to ``cache_len`` capacity (numpy arrays — the
+        caller device-puts them by inserting into a decode slot)."""
+        import jax
+
+        treedef, length, entries, _ = self._layout[seq_id]
+        self.store.flush()  # a fetch racing its own park must see the blocks
+        work = []
+        for ps, nb, _shape in entries:
+            if nb:
+                work.extend((ps, f"{seq_id}/{ps}/b{i}") for i in range(nb))
+            else:
+                work.append((ps, f"{seq_id}/{ps}/full"))
+        parts: Dict[str, List[np.ndarray]] = collections.defaultdict(list)
+        inflight: collections.deque = collections.deque()
+        wi = 0
+        while wi < len(work) or inflight:
+            while wi < len(work) and len(inflight) < self.prefetch_blocks:
+                ps, key = work[wi]
+                inflight.append((ps, self.store.read(key)))
+                wi += 1
+            ps, fut = inflight.popleft()
+            parts[ps].append(fut.result())
+        leaves = []
+        for ps, nb, shape in entries:
+            if nb:
+                arr = np.concatenate(parts[ps], axis=SEQ_AXIS)
+                pad = int(cache_len) - arr.shape[SEQ_AXIS]
+                if pad > 0:
+                    widths = [(0, 0)] * arr.ndim
+                    widths[SEQ_AXIS] = (0, pad)
+                    arr = np.pad(arr, widths)
+                elif pad < 0:
+                    arr = arr[:, :, :int(cache_len)]
+            else:
+                arr = parts[ps][0].reshape(shape)
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves), length
+
+    def drop(self, seq_id: str) -> None:
+        """Forget a sequence and delete its blocks from the slow tier."""
+        rec = self._layout.pop(seq_id, None)
+        if rec is None:
+            return
+        _, _, entries, _ = rec
+        for ps, nb, _shape in entries:
+            if nb:
+                for i in range(nb):
+                    self.store.delete(f"{seq_id}/{ps}/b{i}")
+            else:
+                self.store.delete(f"{seq_id}/{ps}/full")
+
+    # -- accounting ---------------------------------------------------------
+
+    def parked_bytes(self) -> int:
+        return sum(rec[3] for rec in self._layout.values())
+
+    def parked_seqs(self) -> List[str]:
+        return list(self._layout)
+
+    def flush(self) -> None:
+        self.store.flush()
+
+    def mark(self) -> dict:
+        return self.store.mark()
+
+    def delta_since(self, mark: dict) -> dict:
+        return self.store.delta_since(mark)
+
+
+# ---------------------------------------------------------------------------
+# single-sequence slicing (parking side of the serve driver)
+# ---------------------------------------------------------------------------
+
+
+def slice_sequence(cache, b: int):
+    """Extract sequence ``b`` from a batched cache pytree as a batch-1 view
+    (numpy). The ``len`` leaf is excluded — per-sequence length is tracked
+    by the paging layout, not the parked tensor."""
+    import jax
+
+    def take(path, leaf):
+        key = _path_key(path[-1]) if path else None
+        if key == "len":
+            return np.int32(0)  # structural placeholder, never consulted
+        arr = np.asarray(leaf)
+        return arr[:, b: b + 1]
+
+    return jax.tree_util.tree_map_with_path(take, cache)

@@ -193,6 +193,11 @@ class ArrayStore:
     def _read_sync(self, key: str) -> np.ndarray:
         raise NotImplementedError
 
+    def delete(self, key: str) -> None:
+        """Remove a key (idempotent). Synchronous and uncounted: deletions
+        free capacity, they do not move bytes over the link."""
+        raise NotImplementedError
+
     # -- async API ----------------------------------------------------------
 
     def write(self, key: str, arr: np.ndarray) -> Future:
@@ -277,6 +282,10 @@ class HostArrayStore(ArrayStore):
         out = src.copy()
         self._count_read(out.nbytes, time.perf_counter() - t0)
         return out
+
+    def delete(self, key: str) -> None:
+        with self._data_lock:
+            self._data.pop(key, None)
 
     def keys(self):
         with self._data_lock:
@@ -370,6 +379,15 @@ class NvmeStore(ArrayStore):
         self.pool.release(buf)
         self._count_read(nbytes, time.perf_counter() - t0)
         return out
+
+    def delete(self, key: str) -> None:
+        with self._meta_lock:
+            self._meta.pop(key, None)
+        for path in (self._path(key), self._meta_path(key)):
+            try:
+                os.remove(path)
+            except OSError:
+                pass
 
     def keys(self):
         with self._meta_lock:

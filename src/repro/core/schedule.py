@@ -65,6 +65,22 @@ def default_prefetch_layers(num_layers: int, layer_param_count: int,
     return max(1, min(window, num_layers - 1))
 
 
+def default_kv_prefetch_blocks(block_bytes: float, step_flops: float, *,
+                               slow_bw: float = PAPER_NVME_BYTES_PER_S,
+                               peak_flops: float = PAPER_PEAK_FLOPS) -> int:
+    """KV-block read-ahead window for serving (the decode-side mirror of
+    ``default_prefetch_layers``).
+
+    One block fetch moves ``block_bytes`` at ``slow_bw``; one decode step's
+    compute runs ``step_flops`` at ``peak_flops``. The window is the number
+    of decode steps needed to hide one block fetch, clamped to [1, 8] (the
+    shared pinned pool backpressures anything deeper).
+    """
+    read_t = max(block_bytes, 1.0) / max(slow_bw, 1.0)
+    compute_t = max(step_flops, 1.0) / max(peak_flops, 1.0)
+    return max(1, min(8, int(math.ceil(read_t / max(compute_t, 1e-12)))))
+
+
 @dataclasses.dataclass(frozen=True)
 class Event:
     """One scheduler action. ``op`` ∈ {prefetch, materialize, use, evict}."""

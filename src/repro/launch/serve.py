@@ -1,17 +1,30 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+"""Continuous-batching serving driver with tier-paged KV blocks.
 
-Slot-based batching: a fixed batch of decode slots advances in lockstep
-(the standard TPU serving shape); per-slot lengths are tracked and finished
-slots keep decoding into padding (masked out of returned text) — the
-static-shape-friendly simplification of continuous batching.
+A fixed batch of device decode slots advances in lockstep (the
+static-shape-friendly form of continuous batching): per-slot lengths and
+EOS are tracked, a slot whose sequence finishes (EOS or token budget) is
+refilled from the waiting queue, and idle slots keep decoding into padding
+that is masked out of the returned text. Sequences beyond the device KV
+budget wait in the pinned-host (or NVMe) tier as fixed-size per-sequence
+KV blocks (``core/kvcache.py``) and stream back through the shared pinned
+pool when admitted — concurrent-sequence count is bounded by the slow
+tier, not HBM (paper Secs. 3-4 applied to serving state).
 
-Example (CPU, reduced config):
+With ``--plan auto`` the KV tier, slot count, block size, and prefetch
+depth come from ``repro.plan`` (the same Sec. 3 byte arithmetic that
+places parameters); ``--kv-*`` flags override per field. Jitted prefill /
+decode compile untimed (ahead-of-time) and compile time is reported
+separately from throughput.
+
+Example (CPU, reduced config; 8 sequences through 2 device slots):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
-      --batch 4 --prompt-len 32 --new-tokens 16
+      --batch 8 --kv-slots 2 --kv-tier host --prompt-len 32 --new-tokens 16
 """
 from __future__ import annotations
 
 import argparse
+import collections
+import os
 import time
 
 import jax
@@ -21,102 +34,304 @@ import numpy as np
 from repro import compat, configs
 from repro import plan as plan_mod
 from repro.config import ParallelConfig, RunConfig, ShapeConfig
+from repro.core import kvcache
 from repro.core.engine import ZeroInfinityEngine
+from repro.core.offload import HostArrayStore, NvmeStore, PinnedBufferPool
 from repro.launch.mesh import make_local_mesh
+from repro.runtime import metrics as metrics_mod
 
 
-def main() -> None:
+def _parse(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="total sequences to serve; those beyond --kv-slots "
+                         "wait on the KV tier as paged blocks")
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16,
+                    help="per-sequence token budget (includes the EOS token)")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="EOS token id; a slot emitting it finishes early "
+                         "(-1: budget-only)")
+    ap.add_argument("--kv-slots", type=int, default=0,
+                    help="device decode slots (0 = all sequences resident, "
+                         "or the plan's derivation with --plan auto)")
+    ap.add_argument("--kv-tier", default="device",
+                    choices=["device", "host", "nvme"],
+                    help="tier for waiting sequences' KV blocks ('device' "
+                         "stages any overflow through host DRAM)")
+    ap.add_argument("--kv-block-tokens", type=int, default=0,
+                    help="tokens per paged KV block (0 = auto)")
+    ap.add_argument("--kv-dir", default="/tmp/repro_kv",
+                    help="directory backing the NVMe KV tier")
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     plan_mod.add_plan_args(ap)
-    args = ap.parse_args()
+    return ap.parse_args(argv)
 
+
+def run_serve(args, argv=None) -> dict:
+    """The serving run; returns per-sequence tokens + timings + KV metrics
+    (the test surface — ``main`` just prints)."""
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    n_seqs, P, N = args.batch, args.prompt_len, args.new_tokens
+    eos = args.eos_id
     plan = plan_mod.resolve_plan(
-        args, cfg, ShapeConfig("serve-plan", args.prompt_len, args.batch,
-                               "prefill"))
+        args, cfg, ShapeConfig("serve-plan", P + N, n_seqs, "decode"),
+        argv=argv)
     if plan is not None:
-        # serving uses the GSPMD engine's prefill/decode paths; the plan
-        # contributes the memory-derived knobs (remat is always "none" for
-        # non-train shapes, so this matches the legacy construction)
         run = plan.to_run_config()
+        kv_tier = plan.kv_tier
+        slots = plan.kv_slots or n_seqs
+        block_tokens = plan.kv_block_tokens
+        kv_prefetch = plan.kv_prefetch_blocks
     else:
         run = RunConfig(model=cfg, parallel=ParallelConfig(remat="none"))
+        kv_tier = args.kv_tier
+        slots = args.kv_slots or n_seqs
+        block_tokens = args.kv_block_tokens
+        kv_prefetch = 2
+    slots = max(1, min(int(slots), n_seqs))
+    block_tokens = int(block_tokens) or kvcache.default_block_tokens(P + N)
+
     mesh = make_local_mesh(args.data_mesh, args.model_mesh)
     eng = ZeroInfinityEngine(run, mesh)
     state = eng.init_state(jax.random.PRNGKey(args.seed))
     params = state["params"]
 
-    B, P, N = args.batch, args.prompt_len, args.new_tokens
+    # the slow tier for waiting sequences (unused when every slot fits)
+    pool = PinnedBufferPool(run.offload.pinned_buffer_mb << 20)
+    if kv_tier == "nvme":
+        store = NvmeStore(os.path.join(args.kv_dir, "kv"), pool=pool,
+                          workers=run.offload.nvme_workers)
+    else:
+        store = HostArrayStore(pool=pool, workers=2)
+    seq_names = (("k", "v") if cfg.family in kvcache.SEQ_CACHE_FAMILIES
+                 else ())
+    kv = kvcache.PagedKVCache(store, block_tokens=block_tokens,
+                              seq_axis_names=seq_names,
+                              prefetch_blocks=kv_prefetch)
+
+    # ---- prompts for every sequence (waves of `slots` share one jit) ----
     rng = np.random.default_rng(args.seed)
-    shape = ShapeConfig("serve", P, B, "prefill")
-    specs = eng.bundle.input_specs(shape)
-    batch = {}
+    specs = eng.bundle.input_specs(ShapeConfig("serve", P, slots, "prefill"))
+    full = {}
     for k, v in specs.items():
+        shp = (n_seqs,) + tuple(v.shape[1:])
         if np.issubdtype(np.dtype(v.dtype), np.integer):
-            batch[k] = jnp.asarray(rng.integers(0, cfg.vocab_size, v.shape, dtype=np.int32))
+            full[k] = rng.integers(0, cfg.vocab_size, shp, dtype=np.int32)
         else:
-            batch[k] = jnp.asarray(rng.standard_normal(v.shape) * 0.1, dtype=v.dtype)
+            full[k] = (rng.standard_normal(shp) * 0.1).astype(v.dtype)
 
-    prefill = jax.jit(eng.bundle.prefill)
-    decode = jax.jit(eng.bundle.decode_step)
+    def wave_rows(w):
+        lo = w * slots
+        idx = list(range(lo, min(lo + slots, n_seqs)))
+        valid = len(idx)
+        while len(idx) < slots:
+            idx.append(0)  # padding rows; results discarded
+        return idx, valid
 
+    def wave_batch(idx):
+        return {k: jnp.asarray(a[idx]) for k, a in full.items()}
+
+    n_waves = -(-n_seqs // slots)
+    gen = [[] for _ in range(n_seqs)]
+    done = [False] * n_seqs
+    waiting: collections.deque = collections.deque()
+
+    pc = time.perf_counter
     with compat.set_mesh(mesh):
-        t0 = time.perf_counter()
-        logits, cache = prefill(params, batch)
-        jax.block_until_ready(logits)
-        t_prefill = time.perf_counter() - t0
+        # untimed ahead-of-time compile: throughput below is compute-only
+        t0 = pc()
+        prefill_c = jax.jit(eng.bundle.prefill).lower(
+            params, wave_batch(wave_rows(0)[0])).compile()
+        t_compile_prefill = pc() - t0
 
-        # grow cache seq dims to hold the new tokens (dense/encdec KV layouts)
-        cache = _grow_cache(eng, cache, P, P + N, B)
+        t_prefill = 0.0
+        wave0 = None
+        for w in range(n_waves):
+            idx, valid = wave_rows(w)
+            t0 = pc()
+            logits, cache = prefill_c(params, wave_batch(idx))
+            jax.block_until_ready(logits)
+            t_prefill += pc() - t0
+            first = np.asarray(
+                jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+            prefill_len = int(np.asarray(cache["len"]))
+            for j in range(valid):
+                s = idx[j]
+                gen[s].append(int(first[j]))
+                if int(first[j]) == eos or N <= 1:
+                    done[s] = True  # finished at birth: EOS-masked already
+            if w == 0:
+                wave0 = (cache, idx, valid)
+            else:
+                for j in range(valid):
+                    s = idx[j]
+                    if not done[s]:
+                        kv.park(f"seq{s}",
+                                kvcache.slice_sequence(cache, j), prefill_len)
+                        waiting.append(s)
+        kv.flush()
 
-        toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        out_tokens = [np.asarray(toks)]
-        t0 = time.perf_counter()
-        for _ in range(N - 1):
-            logits, cache = decode(params, cache, {"tokens": toks})
-            toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-            out_tokens.append(np.asarray(toks))
-        jax.block_until_ready(toks)
-        t_decode = time.perf_counter() - t0
+        # ---- device slot cache: wave 0 grown to decode capacity, with a
+        # per-slot length vector in place of the scalar prefill length ----
+        cache0, idx0, valid0 = wave0
+        slot_cache = kvcache.grow_cache(cache0, N, cfg.family)
+        slot_cache = {**slot_cache,
+                      "len": jnp.full((slots,), prefill_len, jnp.int32)}
+        cap = prefill_len + N
+        resident = kvcache.device_kv_bytes(slot_cache)
 
-    gen = np.concatenate(out_tokens, axis=1)
-    print(f"prefill: {B}x{P} tokens in {t_prefill*1e3:.1f} ms "
-          f"({B*P/t_prefill:.0f} tok/s)")
-    print(f"decode: {B}x{N-1} tokens in {t_decode*1e3:.1f} ms "
-          f"({B*(N-1)/max(t_decode,1e-9):.0f} tok/s)")
-    for b in range(min(B, 2)):
-        print(f"slot {b}: {gen[b][:16].tolist()}")
+        slot_seq = [idx0[j] if j < valid0 else None for j in range(slots)]
+        active = [j < valid0 and not done[idx0[j]] for j in range(slots)]
+        cur = np.zeros((slots,), np.int32)
+        for j in range(valid0):
+            cur[j] = gen[idx0[j]][-1]
+
+        def _insert(cache_t, single, b, length):
+            def upd(path, leaf, s):
+                key = path[-1].key if hasattr(path[-1], "key") else None
+                if key == "len":
+                    return leaf.at[b].set(length)
+                return jax.lax.dynamic_update_index_in_dim(
+                    leaf, s.astype(leaf.dtype), b, 1)
+            return jax.tree_util.tree_map_with_path(upd, cache_t, single)
+
+        insert_c = jax.jit(_insert, donate_argnums=(0,))
+
+        t0 = pc()
+        decode_c = jax.jit(eng.bundle.decode_step, donate_argnums=(1,)).lower(
+            params, slot_cache, {"tokens": jnp.zeros((slots, 1), jnp.int32)}
+        ).compile()
+        t_compile_decode = pc() - t0
+
+        # ---- continuous-batching decode loop ----
+        history = []
+        t_decode = t_admit = 0.0
+        steps = admissions = 0
+        while True:
+            m = kv.mark()
+            for b in range(slots):
+                if active[b] or not waiting:
+                    continue
+                s = waiting.popleft()
+                ta = pc()
+                single, length = kv.fetch(f"seq{s}", cap)
+                slot_cache = insert_c(
+                    slot_cache, jax.tree.map(jnp.asarray, single),
+                    jnp.int32(b), jnp.int32(length))
+                t_admit += pc() - ta
+                kv.drop(f"seq{s}")
+                slot_seq[b], active[b] = s, True
+                cur[b] = gen[s][-1]
+                admissions += 1
+            if not any(active):
+                break
+            t0 = pc()
+            logits, slot_cache = decode_c(
+                params, slot_cache, {"tokens": jnp.asarray(cur[:, None])})
+            toks = np.asarray(
+                jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+            t_decode += pc() - t0
+            steps += 1
+            history.append(
+                metrics_mod.kv_step_metrics(kv.delta_since(m), resident))
+            for b in range(slots):
+                if not active[b]:
+                    continue  # idle slot: padding decode, masked out
+                s = slot_seq[b]
+                gen[s].append(int(toks[b]))
+                cur[b] = toks[b]
+                if int(toks[b]) == eos or len(gen[s]) >= N:
+                    done[s], active[b], slot_seq[b] = True, False, None
+                    cur[b] = 0
+
+    stats = store.bandwidth_stats()
+    return {
+        "generated": gen,
+        "done": done,
+        "slots": slots,
+        "kv_tier": kv_tier,
+        "block_tokens": block_tokens,
+        "steps": steps,
+        "admissions": admissions,
+        "plan": plan,
+        "history": history,
+        "kv": {
+            "resident_bytes": resident,
+            "in_bytes": int(stats["bytes_read"]),
+            "out_bytes": int(stats["bytes_written"]),
+            "parked_peak_bytes": kv.parked_bytes(),
+            "pinned_peak_bytes": int(pool.peak_resident),
+            "pinned_budget_bytes": int(run.offload.pinned_buffer_mb) << 20,
+        },
+        "timings": {
+            "compile_prefill_s": t_compile_prefill,
+            "compile_decode_s": t_compile_decode,
+            "prefill_s": t_prefill,
+            "decode_s": t_decode,
+            "admit_s": t_admit,
+        },
+    }
 
 
-def _grow_cache(eng, cache, old_len: int, new_len: int, batch: int):
-    """Pad seq-indexed cache leaves from prefill length to decode capacity."""
-    target = eng.bundle.cache_defs(batch, new_len)
-    import jax
+def main(argv=None) -> None:
+    args = _parse(argv)
+    out = run_serve(args, argv)
+    t = out["timings"]
+    gen, slots = out["generated"], out["slots"]
+    n_seqs, P = args.batch, args.prompt_len
+    dec_toks = sum(len(g) for g in gen) - n_seqs  # prefill emits token 1
+    print(f"compile: prefill {t['compile_prefill_s']*1e3:.1f} ms | "
+          f"decode {t['compile_decode_s']*1e3:.1f} ms (untimed warm-up; "
+          f"excluded from throughput)")
+    print(f"prefill: {n_seqs}x{P} tokens in {t['prefill_s']*1e3:.1f} ms "
+          f"({n_seqs * P / max(t['prefill_s'], 1e-9):.0f} tok/s, "
+          f"{slots} slots/wave)")
+    print(f"decode: {dec_toks} tokens over {out['steps']} steps in "
+          f"{t['decode_s']*1e3:.1f} ms "
+          f"({dec_toks / max(t['decode_s'], 1e-9):.0f} tok/s) | "
+          f"{out['admissions']} admissions (+{t['admit_s']*1e3:.1f} ms "
+          f"KV streaming)")
+    kvm = out["kv"]
+    print(f"kv[{out['kv_tier']}]: resident {kvm['resident_bytes']} B | "
+          f"in {kvm['in_bytes']} B | out {kvm['out_bytes']} B | "
+          f"pinned peak {kvm['pinned_peak_bytes']} B "
+          f"(budget {kvm['pinned_budget_bytes']} B)")
+    for s in range(min(n_seqs, 4)):
+        print(f"slot {s}: {gen[s][:16]}")
 
-    flat_t, _ = jax.tree_util.tree_flatten_with_path(
-        target, is_leaf=lambda x: hasattr(x, "shape") and not hasattr(x, "dtype") or False)
-
-    def pad(leaf, d):
-        if not hasattr(d, "shape") or leaf.ndim != len(d.shape):
-            return leaf
-        pads = [(0, max(t - s, 0)) for s, t in zip(leaf.shape, d.shape)]
-        if any(p[1] for p in pads):
-            return jnp.pad(leaf, pads)
-        return leaf
-
-    from repro.core import partition as pt
-    return jax.tree.map(
-        lambda c, d: pad(c, d) if isinstance(d, pt.ParamDef) else c,
-        cache, target,
-        is_leaf=lambda x: not isinstance(x, dict))
+    if args.smoke:
+        if not all(out["done"]):
+            raise SystemExit("SERVE SMOKE FAIL: decode did not complete "
+                             f"(done={out['done']})")
+        for s, g in enumerate(gen):
+            if args.eos_id in g and g.index(args.eos_id) != len(g) - 1:
+                raise SystemExit(
+                    f"SERVE SMOKE FAIL: seq {s} has tokens after EOS: {g}")
+            if len(g) > args.new_tokens:
+                raise SystemExit(
+                    f"SERVE SMOKE FAIL: seq {s} exceeded the "
+                    f"{args.new_tokens}-token budget: {len(g)}")
+        plan = out["plan"]
+        if plan is not None and "kv_resident_bytes" in plan.predictions:
+            pred = plan.predictions["kv_resident_bytes"]
+            if kvm["resident_bytes"] > pred:
+                raise SystemExit(
+                    f"SERVE SMOKE FAIL: measured device KV "
+                    f"{kvm['resident_bytes']} B > planned {pred:.0f} B")
+        if kvm["pinned_peak_bytes"] > kvm["pinned_budget_bytes"]:
+            raise SystemExit(
+                f"SERVE SMOKE FAIL: pinned staging "
+                f"{kvm['pinned_peak_bytes']} B exceeded the "
+                f"{kvm['pinned_budget_bytes']} B budget")
+        print(f"SERVE SMOKE OK: {n_seqs} seqs through {slots} "
+              f"{out['kv_tier']}-tier slots, {out['steps']} steps, "
+              f"{out['admissions']} admissions, EOS-masked, "
+              f"KV residency within plan")
 
 
 if __name__ == "__main__":

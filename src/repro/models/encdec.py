@@ -156,7 +156,8 @@ def make_fns(cfg: ModelConfig, rules: pt.AxisRules, parallel: ParallelConfig):
         x = cm.embed(params["embed"], batch["tokens"], cfg, rules)
         B = x.shape[0]
         clen = cache["len"]
-        positions = jnp.broadcast_to(clen, (B, 1))
+        # scalar (lockstep) or (B,) per-slot lengths (continuous batching)
+        positions = jnp.broadcast_to(jnp.reshape(clen, (-1, 1)), (B, 1))
 
         def body(h, layer):
             blk, kc, vc, xk, xv = layer

@@ -278,7 +278,8 @@ def make_fns(cfg: ModelConfig, rules: pt.AxisRules, parallel: ParallelConfig):
         x = cm.embed(params["embed"], batch["tokens"], cfg, rules)
         B = x.shape[0]
         clen = cache["len"]
-        positions = jnp.broadcast_to(clen, (B, 1))
+        # scalar (lockstep) or (B,) per-slot lengths (continuous batching)
+        positions = jnp.broadcast_to(jnp.reshape(clen, (-1, 1)), (B, 1))
         g = cache["groups"]
         win = g["attn"]["k"].shape[2]
         write_pos = jnp.mod(clen, win)  # ring slot for the new token

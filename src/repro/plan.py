@@ -322,6 +322,14 @@ class InfinityPlan:
     pinned_buffer_mb: int
     remat: str
     grad_accum: int
+    # serving (prefill/decode shapes): the KV-cache tier plan. ``kv_slots``
+    # is the number of device-resident decode slots (0 = not a serving
+    # plan); overflow sequences park on ``kv_tier`` as ``kv_block_tokens``-
+    # sized blocks fetched ``kv_prefetch_blocks`` ahead (core/kvcache.py).
+    kv_tier: str = "device"
+    kv_slots: int = 0
+    kv_block_tokens: int = 0
+    kv_prefetch_blocks: int = 2
     objective: str = "throughput"
     feasible: bool = True
     predicted: Tuple[Tuple[str, float], ...] = ()
@@ -351,12 +359,14 @@ class InfinityPlan:
 
     def summary(self) -> str:
         t = self.tiers
+        kv = (f"kv={self.kv_tier}x{self.kv_slots}"
+              f"/b{self.kv_block_tokens} " if self.kv_slots else "")
         return (f"plan[{self.model.arch}/{self.shape.name}] "
                 f"engine={self.engine} tiers(param/grad/opt/act)="
                 f"{t['param']}/{t['grad']}/{t['opt']}/{t['act']} "
                 f"window={self.prefetch_layers} read_ahead={self.read_ahead} "
                 f"remat={self.remat} grad_accum={self.grad_accum} "
-                f"pinned={self.pinned_buffer_mb}MiB "
+                f"pinned={self.pinned_buffer_mb}MiB " + kv +
                 f"eff~{self.predictions.get('efficiency', 1.0):.3f} "
                 f"feasible={self.feasible}")
 
@@ -432,7 +442,8 @@ class InfinityPlan:
 # Plan fields a caller may override (the legacy CLI knobs, field-by-field).
 OVERRIDABLE = ("param_tier", "grad_tier", "opt_tier", "act_tier", "engine",
                "prefetch_layers", "read_ahead", "nvme_workers",
-               "pinned_buffer_mb", "remat", "grad_accum")
+               "pinned_buffer_mb", "remat", "grad_accum",
+               "kv_tier", "kv_slots", "kv_block_tokens")
 
 
 def _resolve_model(model: Union[str, ModelConfig]) -> ModelConfig:
@@ -705,12 +716,66 @@ def plan_run(model: Union[str, ModelConfig], shape: Union[str, ShapeConfig],
             f"read-ahead {read_ahead}) rows of {_fmt_bytes(row_bytes)}, "
             f"clamped to 1/4 of host DRAM"))
 
+    # ---- serving: KV tier / decode slots / block size (Sec. 3 arithmetic
+    # on the family's actual cache_defs leaves, mirroring state_bytes) ----
+    kv_tier, kv_slots, kv_block_tokens, kv_prefetch = "device", 0, 0, 2
+    if shape.kind in ("prefill", "decode"):
+        from repro.core import kvcache
+
+        per_seq = kvcache.sequence_kv_bytes(model, shape.seq_len)
+        kv_headroom = max(0.0, dev_budget - load("device", act_b))
+        fit = int(kv_headroom // max(per_seq, 1))
+        bsz = shape.global_batch
+        kv_block_tokens = kvcache.default_block_tokens(shape.seq_len)
+        if fit >= bsz:
+            kv_slots = bsz
+            decisions.append(Decision(
+                "kv_tier", "device",
+                f"KV cache ({bsz} seqs x {_fmt_bytes(per_seq)} at "
+                f"{shape.seq_len} ctx = {_fmt_bytes(bsz * per_seq)}) fits "
+                f"the HBM remainder ({_fmt_bytes(kv_headroom)})"))
+        else:
+            kv_slots = max(1, fit)
+            parked = (bsz - kv_slots) * per_seq
+            host_room = host_budget - load("host", act_b)
+            kv_tier = ("host" if parked <= host_room or nvme_budget <= 0
+                       else "nvme")
+            if parked > host_room and nvme_budget <= 0:
+                warnings.append(
+                    f"KV overflow {_fmt_bytes(parked)} exceeds the host "
+                    f"remainder {_fmt_bytes(max(host_room, 0))} and no NVMe "
+                    "is configured")
+            decisions.append(Decision(
+                "kv_tier", kv_tier,
+                f"only {kv_slots}/{bsz} sequences fit the HBM remainder "
+                f"({_fmt_bytes(kv_headroom)} at {_fmt_bytes(per_seq)} per "
+                f"seq, {shape.seq_len} ctx); {_fmt_bytes(parked)} of "
+                f"waiting KV parks on {kv_tier}"))
+            decisions.append(Decision(
+                "kv_slots", str(kv_slots),
+                f"floor(HBM remainder / per-seq KV) = "
+                f"floor({_fmt_bytes(kv_headroom)} / {_fmt_bytes(per_seq)})"))
+        # read-ahead depth: decode-step compute (~4*N FLOPs/token across the
+        # slots) must hide one block fetch from the KV tier's link
+        block_bytes = per_seq * kv_block_tokens / max(shape.seq_len, 1)
+        kv_bw = hw.tier_bandwidth("host" if kv_tier == "device" else kv_tier)
+        kv_prefetch = schedule.default_kv_prefetch_blocks(
+            block_bytes, 4.0 * kv_slots * sb.n_params,
+            slow_bw=max(kv_bw, 1.0), peak_flops=hw.peak_flops)
+        decisions.append(Decision(
+            "kv_block_tokens", str(kv_block_tokens),
+            f"~ctx/8 rounded to a power of two in [16, 1024]; read-ahead "
+            f"{kv_prefetch} blocks hides one {_fmt_bytes(block_bytes)} "
+            f"fetch behind decode compute"))
+
     fields: Dict[str, object] = {
         "param_tier": tiers["param"], "grad_tier": tiers["grad"],
         "opt_tier": tiers["opt"], "act_tier": act_tier, "engine": engine,
         "prefetch_layers": prefetch_layers, "read_ahead": read_ahead,
         "nvme_workers": nvme_workers, "pinned_buffer_mb": pinned_buffer_mb,
         "remat": remat, "grad_accum": grad_accum,
+        "kv_tier": kv_tier, "kv_slots": kv_slots,
+        "kv_block_tokens": kv_block_tokens,
     }
     for c in OFFLOAD_ORDER:
         if tiers[c] == "device":
@@ -806,7 +871,7 @@ def plan_run(model: Union[str, ModelConfig], shape: Union[str, ShapeConfig],
             f"{_fmt_bytes(hw.tier_capacity('device'))}")
     return InfinityPlan(
         model=model, shape=shape, hardware=hw, objective=objective,
-        feasible=feasible,
+        feasible=feasible, kv_prefetch_blocks=kv_prefetch,
         predicted=tuple(sorted(predicted.items())),
         rationale=tuple(decisions), warnings=tuple(warnings),
         **{k: fields[k] for k in OVERRIDABLE})
@@ -830,6 +895,13 @@ def _check_override_feasibility(fields, sb: StateBytes, hw: HardwareSpec,
                 "layered epoch runs the full batch per step (accumulation is "
                 "a pjit-engine knob) — the activation-fit arithmetic is "
                 "optimistic on this engine")
+    if fields.get("kv_tier") not in _TIERS:
+        raise ValueError(
+            f"kv_tier={fields.get('kv_tier')!r}: must be one of {_TIERS}")
+    if int(fields.get("kv_slots", 0) or 0) > shape.global_batch:
+        warnings.append(
+            f"kv_slots={fields['kv_slots']} exceeds the shape's "
+            f"{shape.global_batch} sequences — the extra slots idle")
     if fields["param_tier"] == "nvme":
         if hw.nvme_capacity <= 0:
             warnings.append(
@@ -868,6 +940,10 @@ CLI_FLAG_FIELDS = {
     "--pinned-buffer-mb": "pinned_buffer_mb",
     "--grad-accum": "grad_accum",
     "--remat": "remat",
+    # serving knobs (launch/serve)
+    "--kv-tier": "kv_tier",
+    "--kv-slots": "kv_slots",
+    "--kv-block-tokens": "kv_block_tokens",
 }
 
 _HW_FLAGS = {
@@ -1048,6 +1124,16 @@ def _predict(fields, sb: StateBytes, hw: HardwareSpec, model: ModelConfig,
         out["act_efficiency"] = e
         eff_all = min(eff_all, e)
     out["efficiency"] = eff_all
+    # serving: device-resident KV bytes of the slot cache, and the waiting
+    # KV parked on the slow tier — the serve smoke gate's cross-check
+    if int(fields.get("kv_slots", 0) or 0) > 0:
+        from repro.core import kvcache
+
+        per_seq = float(kvcache.sequence_kv_bytes(model, shape.seq_len))
+        slots = int(fields["kv_slots"])
+        out["kv_per_seq_bytes"] = per_seq
+        out["kv_resident_bytes"] = slots * per_seq
+        out["kv_parked_bytes"] = max(0, shape.global_batch - slots) * per_seq
     # the scheduler-managed denominator: block rows on zero3 (matching the
     # executor's total_param_bytes), every leaf on the GSPMD paths
     out["param_total_bytes"] = float(PARAM_BYTES_PP * streamed)

@@ -1,4 +1,5 @@
-"""Step metrics: tokens/s, step-time EMA, analytic MFU estimate."""
+"""Step metrics: tokens/s, step-time EMA, analytic MFU estimate, and the
+serving-side KV-tier counters (``kv_*`` fields)."""
 from __future__ import annotations
 
 import time
@@ -25,3 +26,21 @@ class MetricsLogger:
             f"step {step:5d} | loss {loss:8.4f} | {tps:9.0f} tok/s | "
             f"{dt*1e3:7.1f} ms" + (f" | {k}" if (k := kw.get('note')) else ""))
         return rec
+
+
+def kv_step_metrics(delta: dict, resident_bytes: int) -> dict:
+    """Per-step KV-tier metrics for the serving loop, named like the
+    training executor's per-tier counters (``param_in_*`` / ``grad_out_*``).
+
+    ``delta`` is an ``ArrayStore.delta_since(mark)`` dict for the KV store:
+    reads are blocks streaming *in* to refill a decode slot (admission),
+    writes are sequences parked *out* to the slow tier. ``resident_bytes``
+    is the device-resident slot-cache footprint. All values are per-step
+    deltas, never cumulative."""
+    return {
+        "kv_resident_bytes": int(resident_bytes),
+        "kv_in_bytes": int(delta.get("bytes_read", 0)),
+        "kv_out_bytes": int(delta.get("bytes_written", 0)),
+        "kv_in_gbps": float(delta.get("read_gbps", 0.0)),
+        "kv_out_gbps": float(delta.get("write_gbps", 0.0)),
+    }

@@ -437,3 +437,63 @@ def test_overridable_covers_every_legacy_knob():
                   "prefetch_layers", "read_ahead", "nvme_workers",
                   "pinned_buffer_mb", "remat", "grad_accum"):
         assert field in OVERRIDABLE
+
+
+# ---------------------------------------------------------------------------
+# serving: KV-tier planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_serving_roomy_keeps_kv_on_device():
+    shape = ShapeConfig("serve", 128, 16, "decode")
+    hw = HardwareSpec(n_devices=1, device_mem=64e9, host_mem=64e9)
+    p = plan_run(FULL, shape, hw)
+    assert p.kv_tier == "device" and p.kv_slots == 16
+    assert p.kv_block_tokens >= 16 and p.kv_prefetch_blocks >= 1
+    assert p.predictions["kv_resident_bytes"] == pytest.approx(
+        16 * p.predictions["kv_per_seq_bytes"])
+    assert p.predictions["kv_parked_bytes"] == 0
+    assert "kv=" in p.summary()
+
+
+def test_plan_serving_starved_device_pages_kv_to_host():
+    from repro.core import kvcache
+
+    shape = ShapeConfig("serve", 128, 16, "decode")
+    per = kvcache.sequence_kv_bytes(FULL, 128)
+    sb = state_bytes(FULL, shape, 1)
+    # room for params + a few sequences only: KV overflow must park on host
+    hw = HardwareSpec(n_devices=1,
+                      device_mem=(sb.param + 4 * per) / 0.7,
+                      host_mem=64e9)
+    p = plan_run(FULL, shape, hw)
+    assert p.kv_tier == "host"
+    assert 1 <= p.kv_slots < 16
+    assert p.predictions["kv_parked_bytes"] == pytest.approx(
+        (16 - p.kv_slots) * per)
+    assert p.predictions["kv_resident_bytes"] < 16 * per
+
+
+def test_plan_serving_kv_fields_roundtrip_json_and_overrides():
+    shape = ShapeConfig("serve", 64, 8, "decode")
+    hw = HardwareSpec(n_devices=1, device_mem=32e9, host_mem=64e9)
+    p = plan_run(FULL, shape, hw,
+                 overrides={"kv_tier": "host", "kv_slots": 3,
+                            "kv_block_tokens": 32})
+    assert (p.kv_tier, p.kv_slots, p.kv_block_tokens) == ("host", 3, 32)
+    p2 = InfinityPlan.from_json(p.to_json())
+    assert (p2.kv_tier, p2.kv_slots, p2.kv_block_tokens,
+            p2.kv_prefetch_blocks) == (p.kv_tier, p.kv_slots,
+                                       p.kv_block_tokens, p.kv_prefetch_blocks)
+    assert p2.predictions["kv_resident_bytes"] == \
+        p.predictions["kv_resident_bytes"]
+    with pytest.raises(ValueError):
+        plan_run(FULL, shape, hw, overrides={"kv_tier": "floppy"})
+
+
+def test_plan_train_shapes_skip_kv_planning():
+    hw = HardwareSpec(n_devices=16, device_mem=32e9, host_mem=1.5e12)
+    p = plan_run(FULL, TRAIN_4K, hw)
+    assert p.kv_slots == 0
+    assert "kv_resident_bytes" not in p.predictions
+    assert "kv=" not in p.summary()

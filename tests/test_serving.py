@@ -1,26 +1,26 @@
-"""Prefill-vs-decode consistency: decoding token S given a prefill over S
-tokens must match prefilling S+1 tokens directly. Covers the KV cache path
-(dense), ring window (recurrentgemma), SSD state handoff (mamba2), MoE
-decode, and enc-dec cross-attention caching."""
+"""Prefill-vs-decode consistency plus the paged-KV serving path: decoding
+token S given a prefill over S tokens must match prefilling S+1 tokens
+directly; sequences paged through the host/NVMe KV tiers must decode
+argmax-identically to an all-device run. Covers the KV cache path (dense),
+ring window (recurrentgemma), SSD state handoff (mamba2), MoE decode,
+enc-dec cross-attention caching, block round-trips, per-slot EOS/length
+tracking, and KV residency staying inside the planned budget."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro import configs
+from repro import plan as plan_mod
 from repro.config import ShapeConfig
+from repro.core import kvcache
+from repro.core.kvcache import pad_seq_caches as _pad_seq_caches
+from repro.core.offload import HostArrayStore, NvmeStore
+from repro.launch import serve
 from repro.models import registry
+from repro.testing import optional_hypothesis
 
-
-def _pad_seq_caches(cache, extra: int, seq_axis_names=("k", "v")):
-    """Grow dense-style K/V caches by `extra` slots along the seq axis."""
-    def grow(path, leaf):
-        key = path[-1].key if hasattr(path[-1], "key") else None
-        if key in seq_axis_names and hasattr(leaf, "ndim") and leaf.ndim == 5:
-            return jnp.pad(leaf, ((0, 0), (0, 0), (0, extra), (0, 0), (0, 0)))
-        return leaf
-
-    return jax.tree_util.tree_map_with_path(grow, cache)
+given, settings, st, HAVE_HYPOTHESIS = optional_hypothesis()
 
 
 @pytest.mark.parametrize("arch", ["llama3.2-3b", "gemma-7b",
@@ -88,3 +88,123 @@ def test_rglru_window_ring_wraps():
     assert err < 0.3, f"ring wraparound mismatch: {err}"
     assert np.array_equal(np.asarray(lg)[:, 0].argmax(-1),
                           np.asarray(lg_full)[:, 0].argmax(-1))
+
+
+# ------------------------------------------------------------------ paged KV
+
+
+def _toy_cache(rng, L=3, B=1, S=20, KV=2, D=4):
+    """Dense-layout KV tree: two 5-dim seq leaves, one opaque leaf, a len."""
+    f = lambda *shp: jnp.asarray(rng.standard_normal(shp).astype(np.float32))
+    return {"k": f(L, B, S, KV, D), "v": f(L, B, S, KV, D),
+            "aux": f(L, B, 7), "len": jnp.asarray(S, jnp.int32)}
+
+
+def _check_roundtrip(kv, cache, length, cap):
+    kv.park("s0", cache, length)
+    kv.flush()
+    got, glen = kv.fetch("s0", cap)
+    assert glen == length
+    for name in ("k", "v"):
+        a = np.asarray(cache[name])[:, :, :length]
+        g = np.asarray(got[name])
+        assert g.shape[2] == cap
+        np.testing.assert_array_equal(g[:, :, :length], a)
+        assert not np.any(g[:, :, length:])  # zero-padded growth region
+    np.testing.assert_array_equal(np.asarray(got["aux"]),
+                                  np.asarray(cache["aux"]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_kv_block_roundtrip_property(data):
+    """Any (length, block, capacity) split reassembles bit-identically."""
+    length = data.draw(st.integers(1, 40))
+    block = data.draw(st.sampled_from([4, 8, 16]))
+    cap = data.draw(st.integers(length, 48))
+    rng = np.random.default_rng(length * 131 + block)
+    cache = _toy_cache(rng, S=length)
+    kv = kvcache.PagedKVCache(HostArrayStore(pool_mb=4),
+                              block_tokens=block)
+    _check_roundtrip(kv, cache, length, cap)
+    assert kv.n_blocks(length) == -(-length // block)
+
+
+def test_kv_block_roundtrip_nvme(tmp_path):
+    """Blocks survive the NVMe tier; drop() reclaims the files."""
+    import os
+
+    rng = np.random.default_rng(0)
+    cache = _toy_cache(rng, S=20)
+    kv = kvcache.PagedKVCache(NvmeStore(str(tmp_path), pool_mb=4),
+                              block_tokens=8)
+    _check_roundtrip(kv, cache, 20, 32)
+    assert kv.parked_bytes() > 0
+    kv.drop("s0")
+    assert kv.parked_bytes() == 0
+    assert not os.listdir(tmp_path)  # delete() freed the NVMe capacity
+
+
+def _serve(argv):
+    return serve.run_serve(serve._parse(argv), argv)
+
+
+@pytest.mark.parametrize("arch", [
+    "smollm-135m",
+    pytest.param("granite-moe-1b-a400m", marks=pytest.mark.slow),
+    pytest.param("seamless-m4t-medium", marks=pytest.mark.slow),
+])
+def test_paged_host_decode_matches_all_device(arch):
+    """More sequences than device slots, KV waiting on the host tier:
+    per-sequence outputs must be argmax-identical to an all-device run."""
+    base = ["--arch", arch, "--smoke", "--batch", "5",
+            "--prompt-len", "16", "--new-tokens", "6"]
+    paged = _serve(base + ["--kv-tier", "host", "--kv-slots", "2"])
+    full = _serve(base + ["--kv-slots", "5"])
+    assert paged["generated"] == full["generated"]
+    assert all(paged["done"]) and all(full["done"])
+    assert paged["admissions"] == 3  # seqs 2-4 really streamed through host
+    assert paged["kv"]["in_bytes"] > 0 and paged["kv"]["out_bytes"] > 0
+    assert full["admissions"] == 0 and full["kv"]["in_bytes"] == 0
+
+
+def test_slot_finish_contributes_exactly_k_tokens():
+    """A slot whose sequence emits EOS at step k contributes exactly k
+    tokens — the docstring's per-slot length/EOS tracking, not lockstep."""
+    argv = ["--arch", "mamba2-370m", "--smoke", "--batch", "4",
+            "--prompt-len", "16", "--new-tokens", "6",
+            "--kv-tier", "host", "--kv-slots", "2"]
+    base = _serve(argv)
+    t = base["generated"][1][3]  # force seq 1 to finish mid-stream
+    got = _serve(argv + ["--eos-id", str(t)])
+
+    def cut(g):
+        return g[: g.index(t) + 1] if t in g else g
+
+    assert got["generated"] == [cut(g) for g in base["generated"]]
+    k = base["generated"][1].index(t) + 1
+    assert len(got["generated"][1]) == k
+    assert all(got["done"])
+
+
+def test_kv_residency_stays_inside_planned_budget():
+    """Eviction under pressure: 6 sequences through 2 device slots must
+    never exceed the plan's predicted device-resident KV bytes, and pinned
+    staging stays inside the pool budget."""
+    cfg = configs.smoke("smollm-135m")
+    shape = ShapeConfig("serve-plan", 16 + 6, 6, "decode")
+    plan = plan_mod.plan_run(
+        cfg, shape,
+        plan_mod.HardwareSpec(n_devices=1, device_mem=32e9, host_mem=64e9),
+        overrides={"kv_tier": "host", "kv_slots": 2})
+    assert plan.kv_tier == "host" and plan.kv_slots == 2
+    pred = plan.predictions["kv_resident_bytes"]
+    assert pred > 0
+
+    out = _serve(["--arch", "smollm-135m", "--smoke", "--batch", "6",
+                  "--prompt-len", "16", "--new-tokens", "6",
+                  "--kv-tier", "host", "--kv-slots", "2"])
+    assert out["kv"]["resident_bytes"] <= pred
+    assert out["history"] and all(
+        r["kv_resident_bytes"] <= pred for r in out["history"])
+    assert out["kv"]["pinned_peak_bytes"] <= out["kv"]["pinned_budget_bytes"]

@@ -48,3 +48,14 @@ def test_serve_cli(tmp_path):
     out = run_cli(["repro.launch.serve", "--arch", "smollm-135m", "--smoke",
                    "--batch", "2", "--prompt-len", "16", "--new-tokens", "8"])
     assert "prefill:" in out and "decode:" in out and "slot 0:" in out
+    assert "compile:" in out  # warm-up reported separately from throughput
+    assert "SERVE SMOKE OK" in out
+
+
+@pytest.mark.slow
+def test_serve_cli_paged_nvme(tmp_path):
+    out = run_cli(["repro.launch.serve", "--arch", "smollm-135m", "--smoke",
+                   "--batch", "5", "--kv-slots", "2", "--kv-tier", "nvme",
+                   "--kv-dir", str(tmp_path), "--prompt-len", "16",
+                   "--new-tokens", "8"])
+    assert "kv[nvme]:" in out and "SERVE SMOKE OK" in out
