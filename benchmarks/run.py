@@ -273,7 +273,7 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
                    param_tier: str = "device", grad_tier: str = "device",
                    prefetch_layers: int = 0, read_ahead: int = 2,
                    nvme_workers: int = 2, plan_mode: str = "manual",
-                   plan_args=None) -> None:
+                   plan_args=None, param_quant: str = "none") -> None:
     import jax
     import jax.numpy as jnp
 
@@ -308,6 +308,7 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
             "prefetch_layers": prefetch_layers, "read_ahead": read_ahead,
             "nvme_workers": nvme_workers, "remat": "full", "grad_accum": 1,
             "pinned_buffer_mb": 64, "act_tier": "device",
+            "param_quant": param_quant,
         })
         run = RunConfig(model=cfg,
                         parallel=make_parallel(engine),
@@ -316,12 +317,15 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
                                              grad_tier=grad_tier,
                                              nvme_dir=nvme_dir,
                                              prefetch_layers=prefetch_layers,
+                                             param_quant=param_quant,
                                              param_read_ahead=read_ahead,
                                              nvme_workers=nvme_workers),
                         train=TrainConfig())
     eng_name = run.parallel.engine
     cell = (f"{eng_name}_p{run.offload.param_tier}_g{run.offload.grad_tier}"
             f"_o{run.offload.opt_tier}")
+    if run.offload.param_quant != "none":
+        cell += f"_{run.offload.param_quant}"
     plan_path = os.path.join(os.path.dirname(__file__), "..", "experiments",
                              "bench", f"plan_{cell}.json")
     plan.save(os.path.abspath(plan_path))
@@ -350,6 +354,11 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
         for k in ("param_in", "param_out", "grad_out", "opt_read", "opt_write"):
             if f"{k}_bytes" in m:
                 emit(f"executor/{cell}/step_{k}_bytes", 0.0, int(m[f"{k}_bytes"]))
+                # wire bytes = what actually crossed the slow-tier link
+                # (differs from the logical count under --param-quant)
+                if f"{k}_wire_bytes" in m:
+                    emit(f"executor/{cell}/step_{k}_wire_bytes", 0.0,
+                         int(m[f"{k}_wire_bytes"]))
                 emit(f"executor/{cell}/step_{k}_gbps", 0.0,
                      f"{m[f'{k}_gbps']:.3f}")
         # layer-scheduler residency. Scope differs by engine: the zero3
@@ -376,6 +385,53 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
                  f"{v:.3f}" if isinstance(v, float) else v)
     finally:
         shutil.rmtree(nvme_dir, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# Quantized transport: bf16 vs q8/q4 slow-tier stream rates (measured — the
+# same logical rows, wire bytes shrink by the compression ratio, so the
+# *logical* GB/s delivered to the consumer rises on a bandwidth-bound link)
+# ---------------------------------------------------------------------------
+
+def quant_micro() -> None:
+    import ml_dtypes
+
+    from repro.core import qformat
+    from repro.core.offload import NvmeStore
+
+    rows = [np.random.default_rng(i).standard_normal((1 << 20,))
+            .astype(ml_dtypes.bfloat16) for i in range(8)]
+    logical_total = sum(r.nbytes for r in rows)
+    rates = {}
+    for fmt in ("none", "q8", "q4"):
+        d = tempfile.mkdtemp(prefix="repro_bench_quant")
+        try:
+            store = qformat.maybe_wrap_store(
+                NvmeStore(d, pool_mb=128, workers=4, overlap=True), fmt)
+            for i, r in enumerate(rows):
+                store.write(f"r{i}", r)
+            store.flush()
+            m = store.mark()
+            t0 = time.perf_counter()
+            futs = [store.read(f"r{i}") for i in range(len(rows))]
+            for f in futs:
+                f.result()
+            wall = time.perf_counter() - t0
+            delta = store.delta_since(m)
+            wire = int(delta["bytes_read"])
+            logical = int(delta.get("logical_bytes_read", wire))
+            assert logical == logical_total
+            rates[fmt] = logical / wall / 1e9
+            emit(f"quant/{fmt}/read_logical_GBs", wall * 1e6,
+                 f"{rates[fmt]:.2f}")
+            emit(f"quant/{fmt}/read_wire_bytes", 0.0, wire)
+            emit(f"quant/{fmt}/wire_over_logical", 0.0,
+                 f"{wire / logical:.3f}")
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    for fmt in ("q8", "q4"):
+        emit(f"quant/{fmt}/stream_speedup_vs_bf16", 0.0,
+             f"{rates[fmt] / max(rates['none'], 1e-9):.2f}")
 
 
 # ---------------------------------------------------------------------------
@@ -498,6 +554,7 @@ BENCHES = {
     "fig6d": fig6d_overlap,
     "fig6e": fig6e_act_offload,
     "micro": train_step_micro,
+    "quant": quant_micro,
     "serving": serving_micro,
     "executor": executor_micro,
     "kernels": kernels_micro,
@@ -521,6 +578,10 @@ def main() -> None:
                     help="gradient-drain tier for the `executor` bench")
     ap.add_argument("--prefetch-layers", type=int, default=0,
                     help="layer-scheduler window (0 = bandwidth-aware auto)")
+    ap.add_argument("--param-quant", default="none",
+                    choices=["none", "q8", "q4"],
+                    help="block-quantized param wire format for the "
+                         "`executor` bench")
     ap.add_argument("--read-ahead", type=int, default=2,
                     help="slow-tier param reads in flight beyond the window")
     ap.add_argument("--nvme-workers", type=int, default=2,
@@ -537,7 +598,8 @@ def main() -> None:
                            args.offload_param, args.offload_grad,
                            args.prefetch_layers, args.read_ahead,
                            args.nvme_workers,
-                           plan_mode=args.plan, plan_args=args)
+                           plan_mode=args.plan, plan_args=args,
+                           param_quant=args.param_quant)
         else:
             BENCHES[k]()
 

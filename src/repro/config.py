@@ -122,6 +122,11 @@ class ParallelConfig:
                         ("none", "int8"))
         _require_choice(c, "engine", self.engine, ("pjit", "zero3"))
         _require_min(c, "grad_accum", self.grad_accum, 1)
+        if self.grad_compression != "none" and self.engine != "zero3":
+            raise ValueError(
+                "ParallelConfig.grad_compression='int8' requires "
+                "engine='zero3': the GSPMD engine's gradient reduction is "
+                "placed by XLA and has no compressed collective path")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,6 +149,9 @@ class OffloadConfig:
     grad_tier: str = "device"  # device | host | nvme
     opt_tier: str = "device"  # device | host | nvme
     act_tier: str = "device"  # device | host    (activation checkpoints)
+    param_quant: str = "none"  # none | q8 | q4 — block-quantized wire format
+    # for slow-tier param rows (core/qformat.py); shrinks slow-tier traffic
+    # and the pinned staging budget by the compression ratio
     nvme_dir: str = "/tmp/repro_nvme"
     pinned_buffer_mb: int = 64  # shared pinned buffer-pool budget (all stores)
     overlap: bool = True  # async prefetch/writeback threads
@@ -159,6 +167,7 @@ class OffloadConfig:
         _require_choice(c, "grad_tier", self.grad_tier, tiers)
         _require_choice(c, "opt_tier", self.opt_tier, tiers)
         _require_choice(c, "act_tier", self.act_tier, ("device", "host"))
+        _require_choice(c, "param_quant", self.param_quant, ("none", "q8", "q4"))
         _require_min(c, "param_read_ahead", self.param_read_ahead, 1)
         _require_min(c, "prefetch_layers", self.prefetch_layers, 0)
         _require_min(c, "nvme_workers", self.nvme_workers, 1)

@@ -54,6 +54,7 @@ import numpy as np
 
 from repro import compat
 from repro.config import RunConfig, ShapeConfig
+from repro.core import qformat
 from repro.core import schedule as sched_mod
 from repro.core.engine import ZeroInfinityEngine
 from repro.core.offload import (ArrayStore, ChunkedAdamOffload, HostArrayStore,
@@ -129,6 +130,12 @@ class InfinityExecutor:
                 "partition_mode='allgather' (the layer scheduler streams "
                 "per-rank rows); broadcast is the non-scaling contrast "
                 "baseline — keep params on the device/host tier for it")
+        if self.layered and run.parallel.grad_compression != "none":
+            raise ValueError(
+                "grad_compression='int8' applies to the monolithic step's "
+                "replicated-grad reduce; the layered epoch "
+                "(param_tier='nvme' + zero3) reduce-scatters rows through "
+                "the all-gather transpose and is not compressed")
         # shared pinned staging budget across all of this executor's stores
         self._pool = PinnedBufferPool(off.pinned_buffer_mb << 20)
         self.opt_store: Optional[ArrayStore] = None
@@ -170,13 +177,20 @@ class InfinityExecutor:
     def _make_store(self, tier: str, name: str) -> ArrayStore:
         """Slow-tier store for one state class; NVMe stores get their own
         subdirectory (key namespaces never collide across classes) and all
-        stores share the executor's pinned pool and worker-thread count."""
+        stores share the executor's pinned pool and worker-thread count.
+        With ``offload.param_quant`` set, the *param* store is wrapped in
+        ``QuantizedArrayStore``: rows cross the tier (and occupy the pinned
+        staging pool) in block-quantized wire bytes, decoded on read."""
         off = self.run.offload
         if tier == "nvme":
-            return NvmeStore(os.path.join(off.nvme_dir, name), pool=self._pool,
-                             overlap=off.overlap, workers=off.nvme_workers)
-        return HostArrayStore(pool=self._pool, overlap=off.overlap,
-                              workers=off.nvme_workers)
+            store = NvmeStore(os.path.join(off.nvme_dir, name), pool=self._pool,
+                              overlap=off.overlap, workers=off.nvme_workers)
+        else:
+            store = HostArrayStore(pool=self._pool, overlap=off.overlap,
+                                   workers=off.nvme_workers)
+        if name == "param":
+            store = qformat.maybe_wrap_store(store, off.param_quant)
+        return store
 
     def reseed(self, state, step: int = 0):
         """(Re)populate the slow-tier stores from ``state`` — called by
@@ -352,6 +366,10 @@ class InfinityExecutor:
             state = dict(portable)
             state = jax.device_put(
                 state, {k: shardings[k] for k in state})
+            if getattr(self.engine, "grad_compress", False):
+                # residuals restart at zero (rank-local quantization error
+                # is not portable across tier/topology changes)
+                state["g_err"] = self.engine.init_g_err()
             if not self.offgraph:
                 flat32 = state["flat"].astype(jnp.float32)
                 state["master"] = jax.device_put(flat32, shardings["master"])
@@ -504,7 +522,9 @@ class InfinityExecutor:
             window = off.prefetch_layers
             if not window:
                 window = sched_mod.default_prefetch_layers(
-                    L, self.engine.layout.padded, tokens)
+                    L, self.engine.layout.padded, tokens,
+                    compression_ratio=qformat.compression_ratio(
+                        off.param_quant))
             self._sched_tokens = tokens
             ranks = sorted(self._rank_of.values())
             stream = self.param_stream
@@ -734,27 +754,43 @@ class InfinityExecutor:
         (write-back), grad-out (drain), opt-read/opt-write (the streamed
         Adam pipeline). All values are this step's deltas — never cumulative
         totals — plus the legacy ``nvme_*`` aggregate over NVMe-backed
-        stores for run summaries."""
+        stores for run summaries.
+
+        Each class reports two byte counts: ``<class>_*_bytes`` is *logical*
+        traffic (the full-precision arrays the engine moved) and
+        ``<class>_*_wire_bytes`` is what actually crossed the tier link —
+        identical on plain stores, smaller under a quantized wire format
+        (``offload.param_quant``). The ``*_gbps`` rates are wire rates (the
+        link speed the hardware delivers)."""
         out = dict(metrics)
         nvme = {"bytes_read": 0, "bytes_written": 0}
         for name, store in self._active_stores():
             d = store.delta_since(marks[name])
+            wire_r, wire_w = d["bytes_read"], d["bytes_written"]
+            logical_r = d.get("logical_bytes_read", wire_r)
+            logical_w = d.get("logical_bytes_written", wire_w)
             if name == "param":
-                out["param_in_bytes"] = d["bytes_read"]
+                out["param_in_bytes"] = logical_r
+                out["param_in_wire_bytes"] = wire_r
                 out["param_in_gbps"] = d["read_gbps"]
-                out["param_out_bytes"] = d["bytes_written"]
+                out["param_out_bytes"] = logical_w
+                out["param_out_wire_bytes"] = wire_w
                 out["param_out_gbps"] = d["write_gbps"]
             elif name == "grad":
-                out["grad_out_bytes"] = d["bytes_written"]
+                out["grad_out_bytes"] = logical_w
+                out["grad_out_wire_bytes"] = wire_w
                 out["grad_out_gbps"] = d["write_gbps"]
             else:
-                out["opt_read_bytes"] = d["bytes_read"]
+                out["opt_read_bytes"] = logical_r
+                out["opt_read_wire_bytes"] = wire_r
                 out["opt_read_gbps"] = d["read_gbps"]
-                out["opt_write_bytes"] = d["bytes_written"]
+                out["opt_write_bytes"] = logical_w
+                out["opt_write_wire_bytes"] = wire_w
                 out["opt_write_gbps"] = d["write_gbps"]
             if store.kind == "nvme":
-                nvme["bytes_read"] += d["bytes_read"]
-                nvme["bytes_written"] += d["bytes_written"]
+                # the aggregate counts wire bytes — what the device saw
+                nvme["bytes_read"] += wire_r
+                nvme["bytes_written"] += wire_w
         out["nvme_bytes_read"] = nvme["bytes_read"]
         out["nvme_bytes_written"] = nvme["bytes_written"]
         # resident (outstanding + cached) — what the fixed supply bounds
@@ -790,6 +826,11 @@ class InfinityExecutor:
             total_pred = sum(v for v in pred_rw if v is not None)
             if total_pred and any(k in out for k in measured_keys):
                 out[f"plan_{cls_}_step_bytes"] = total_pred
+            pred_wire = [pred.get(f"{cls_}_step_read_wire_bytes"),
+                         pred.get(f"{cls_}_step_write_wire_bytes")]
+            total_wire = sum(v for v in pred_wire if v is not None)
+            if total_wire and any(k in out for k in measured_keys):
+                out[f"plan_{cls_}_step_wire_bytes"] = total_wire
         return out
 
     def bandwidth_stats(self) -> dict:
@@ -808,6 +849,10 @@ class InfinityExecutor:
             out[f"{name}_bytes_written"] = s["bytes_written"]
             out[f"{name}_read_gbps"] = s["read_gbps"]
             out[f"{name}_write_gbps"] = s["write_gbps"]
+            out[f"{name}_logical_bytes_read"] = s.get(
+                "logical_bytes_read", s["bytes_read"])
+            out[f"{name}_logical_bytes_written"] = s.get(
+                "logical_bytes_written", s["bytes_written"])
             tot_r += s["bytes_read"]
             tot_w += s["bytes_written"]
             tot_rt += s["read_time"]

@@ -162,6 +162,11 @@ class ArrayStore:
                 "write_gbps": self.bytes_written / max(self.write_time, 1e-9) / 1e9,
                 "bytes_read": self.bytes_read,
                 "bytes_written": self.bytes_written,
+                # logical == wire on an unwrapped store; the quantizing
+                # wrapper (core/qformat.py) overrides the logical keys with
+                # decoded-array bytes so compression is a measured multiplier
+                "logical_bytes_read": self.bytes_read,
+                "logical_bytes_written": self.bytes_written,
                 "read_time": self.read_time,
                 "write_time": self.write_time,
                 # resident = outstanding + cached-for-reuse: the real pinned
@@ -173,6 +178,8 @@ class ArrayStore:
         """Counter snapshot; pass to ``delta_since`` for per-step stats."""
         with self._stat_lock:
             return {"bytes_read": self.bytes_read, "bytes_written": self.bytes_written,
+                    "logical_bytes_read": self.bytes_read,
+                    "logical_bytes_written": self.bytes_written,
                     "read_time": self.read_time, "write_time": self.write_time}
 
     def delta_since(self, mark: dict) -> dict:
@@ -182,6 +189,7 @@ class ArrayStore:
             rt = self.read_time - mark["read_time"]
             wt = self.write_time - mark["write_time"]
         return {"bytes_read": br, "bytes_written": bw,
+                "logical_bytes_read": br, "logical_bytes_written": bw,
                 "read_gbps": br / max(rt, 1e-9) / 1e9,
                 "write_gbps": bw / max(wt, 1e-9) / 1e9}
 

@@ -1,0 +1,430 @@
+"""Block-quantized wire formats for the slow tiers (quantized tier transport).
+
+Effective NVMe/PCIe bandwidth is the paper's binding constraint (Sec. 4's
+bandwidth model sizes every prefetch window the planner derives). Whoever
+moves fewer bytes over the slow link wins — so the stores can optionally
+ship parameter rows (and parked KV blocks) in a block-quantized *wire*
+format and decode on the way back up, multiplying the effective slow-tier
+bandwidth by the compression ratio:
+
+  * ``q8`` — llama.cpp-style q8_0: blocks of 32 elements as int8 quants
+    plus one fp16 absmax/127 scale. 34 wire bytes per 32 elements
+    (1.0625 B/elem, 0.53x of bf16).
+  * ``q4`` — 4-bit scale+min variant: blocks of 32 elements as packed
+    nibbles plus one fp16 scale and one fp16 min. 20 wire bytes per 32
+    elements (0.625 B/elem, 0.31x of bf16).
+
+A wire payload is self-describing: ``b"QFMT"`` magic, a little-endian
+uint32 header length, a JSON header (fmt / dtype / shape / block), then the
+body (scales, [mins,] quants). Non-float arrays pass through as ``raw``
+(exact bytes) so stores holding mixed content — e.g. the paged KV cache's
+int32 length placeholders — stay correct.
+
+``QuantizedArrayStore`` wraps any ``ArrayStore`` (``HostArrayStore`` /
+``NvmeStore``) so rows transit in wire format transparently: writes encode
+in the caller's thread, reads decode lazily on ``result()``. The wrapper
+keeps *logical* byte counters next to the wrapped store's *wire* counters,
+so the measured bandwidth multiplier is a real number, not a phantom. A
+``__qformat__`` metadata key written into the store records the configured
+format, so a reopened NVMe directory fails fast on a format mismatch.
+
+The encode/decode cores exist twice on purpose: numpy (for the stores'
+worker threads) and jnp mirrors (for in-graph use and the fused Pallas
+dequant-matmul in ``kernels/tiled_matmul.py``, which consumes the wire
+layout's int8 quants + fp16 scales directly so no full-precision copy is
+ever materialized in HBM).
+"""
+from __future__ import annotations
+
+import json
+import struct
+import threading
+from concurrent.futures import Future
+from typing import Dict, Optional, Tuple
+
+import ml_dtypes  # noqa: F401  (registers bfloat16 & friends with numpy)
+import numpy as np
+
+MAGIC = b"QFMT"
+BLOCK = 32  # elements per quantization block (both formats)
+FORMATS = ("q8", "q4")
+_METADATA_KEY = "__qformat__"
+
+# wire bytes per element, per-block scale overhead included
+WIRE_BYTES_PER_ELEM = {
+    "q8": 34.0 / BLOCK,  # 32 x int8 + 1 x fp16 scale
+    "q4": 20.0 / BLOCK,  # 16 packed bytes + fp16 scale + fp16 min
+}
+
+# dtypes that quantize; everything else passes through as raw bytes
+_FLOAT_NAMES = ("float16", "float32", "float64", "bfloat16")
+
+
+def compression_ratio(fmt: str, dtype="bfloat16") -> float:
+    """Logical bytes / wire bytes for ``fmt`` carrying ``dtype`` payloads
+    (header overhead excluded — negligible for real rows). ``"none"``/raw
+    is 1.0, so callers can use this unconditionally in bandwidth math."""
+    if fmt in (None, "none", "raw"):
+        return 1.0
+    if fmt not in WIRE_BYTES_PER_ELEM:
+        raise ValueError(f"unknown quant format {fmt!r}; known: {FORMATS}")
+    return np.dtype(dtype).itemsize / WIRE_BYTES_PER_ELEM[fmt]
+
+
+# ---------------------------------------------------------------------------
+# numpy encode/decode cores (the stores' worker-thread path)
+# ---------------------------------------------------------------------------
+
+
+def _pad_blocks(flat: np.ndarray) -> np.ndarray:
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.float32)])
+    return flat.reshape(-1, BLOCK)
+
+
+def q8_encode_np(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """fp array -> (quants int8 (nb, BLOCK), scales fp16 (nb,)).
+
+    scale = absmax/127 rounded to fp16; the quantizer divides by the *same*
+    rounded scale it stores, so the per-element error is bounded by the
+    stored scale (~scale/2 typical, one scale unit worst-case with the
+    fp16 rounding + clip)."""
+    blocks = _pad_blocks(np.asarray(x, np.float32).reshape(-1))
+    s = (np.max(np.abs(blocks), axis=1) / 127.0).astype(np.float16)
+    s32 = s.astype(np.float32)
+    s_safe = np.where(s32 > 0, s32, 1.0)
+    q = np.clip(np.rint(blocks / s_safe[:, None]), -127, 127).astype(np.int8)
+    return q, s
+
+
+def q8_decode_np(q: np.ndarray, s: np.ndarray) -> np.ndarray:
+    """(quants, scales) -> flat fp32 of nb*BLOCK elements."""
+    return (q.astype(np.float32)
+            * s.astype(np.float32)[:, None]).reshape(-1)
+
+
+def q4_encode_np(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """fp array -> (packed uint8 (nb, BLOCK//2), scales fp16, mins fp16).
+
+    q = round((x - min) / scale) in [0, 15]; an all-equal block stores
+    scale=0 and decodes exactly to its (fp16-rounded) min."""
+    blocks = _pad_blocks(np.asarray(x, np.float32).reshape(-1))
+    mn = np.min(blocks, axis=1)
+    mx = np.max(blocks, axis=1)
+    s = ((mx - mn) / 15.0).astype(np.float16)
+    m16 = mn.astype(np.float16)
+    s32 = s.astype(np.float32)
+    m32 = m16.astype(np.float32)
+    s_safe = np.where(s32 > 0, s32, 1.0)
+    q = np.clip(np.rint((blocks - m32[:, None]) / s_safe[:, None]),
+                0, 15).astype(np.uint8)
+    packed = (q[:, 0::2] | (q[:, 1::2] << 4)).astype(np.uint8)
+    return packed, s, m16
+
+
+def q4_decode_np(packed: np.ndarray, s: np.ndarray,
+                 m16: np.ndarray) -> np.ndarray:
+    nb = packed.shape[0]
+    q = np.empty((nb, BLOCK), np.float32)
+    q[:, 0::2] = packed & 0x0F
+    q[:, 1::2] = packed >> 4
+    return (q * s.astype(np.float32)[:, None]
+            + m16.astype(np.float32)[:, None]).reshape(-1)
+
+
+def _dtype_name(dtype) -> str:
+    return str(np.dtype(dtype))
+
+
+def encode_array(x: np.ndarray, fmt: str) -> np.ndarray:
+    """Array -> self-describing wire payload (1-D uint8).
+
+    Float dtypes quantize with ``fmt``; anything else (ints, bools — e.g.
+    the KV cache's length placeholders) passes through as ``raw`` bytes."""
+    if fmt not in FORMATS:
+        raise ValueError(f"unknown quant format {fmt!r}; known: {FORMATS}")
+    x = np.asarray(x)
+    name = _dtype_name(x.dtype)
+    if name not in _FLOAT_NAMES or x.size == 0:
+        used, block, body = "raw", 0, x.tobytes()
+    elif fmt == "q8":
+        q, s = q8_encode_np(x)
+        used, block, body = "q8", BLOCK, s.tobytes() + q.tobytes()
+    else:
+        packed, s, m16 = q4_encode_np(x)
+        used, block = "q4", BLOCK
+        body = s.tobytes() + m16.tobytes() + packed.tobytes()
+    header = json.dumps({"fmt": used, "dtype": name,
+                         "shape": list(x.shape), "block": block},
+                        separators=(",", ":")).encode()
+    payload = MAGIC + struct.pack("<I", len(header)) + header + body
+    return np.frombuffer(payload, np.uint8).copy()
+
+
+def _parse_wire(wire: np.ndarray) -> Tuple[dict, bytes, int]:
+    buf = np.ascontiguousarray(np.asarray(wire, np.uint8)).tobytes()
+    if buf[:4] != MAGIC:
+        raise ValueError("not a QFMT wire payload (bad magic)")
+    (hlen,) = struct.unpack_from("<I", buf, 4)
+    hdr = json.loads(buf[8:8 + hlen].decode())
+    return hdr, buf, 8 + hlen
+
+
+def decode_array(wire: np.ndarray) -> np.ndarray:
+    """Wire payload -> array with the original shape and dtype."""
+    hdr, buf, off = _parse_wire(wire)
+    shape = tuple(hdr["shape"])
+    dtype = np.dtype(hdr["dtype"])
+    n = int(np.prod(shape)) if shape else 1
+    fmt = hdr["fmt"]
+    if fmt == "raw":
+        return np.frombuffer(buf, dtype=dtype, offset=off,
+                             count=n if shape else 1).reshape(shape).copy()
+    nb = -(-n // BLOCK)
+    if fmt == "q8":
+        s = np.frombuffer(buf, np.float16, count=nb, offset=off)
+        q = np.frombuffer(buf, np.int8, count=nb * BLOCK,
+                          offset=off + nb * 2).reshape(nb, BLOCK)
+        flat = q8_decode_np(q, s)
+    elif fmt == "q4":
+        s = np.frombuffer(buf, np.float16, count=nb, offset=off)
+        m16 = np.frombuffer(buf, np.float16, count=nb, offset=off + nb * 2)
+        packed = np.frombuffer(buf, np.uint8, count=nb * (BLOCK // 2),
+                               offset=off + nb * 4).reshape(nb, BLOCK // 2)
+        flat = q4_decode_np(packed, s, m16)
+    else:
+        raise ValueError(f"wire payload has unknown fmt {fmt!r}")
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def wire_matmul_operands(wire: np.ndarray
+                         ) -> Tuple[np.ndarray, np.ndarray, np.dtype]:
+    """View a q8 wire payload of a 2-D (K, N) array as fused-matmul
+    operands *without dequantizing*: (quants int8 (K, N), scales fp16
+    (K, N//BLOCK), out_dtype).
+
+    Wire blocks run along the row-major flattening — consecutive elements
+    of N — so for N % BLOCK == 0 the block grid is exactly (K, N//BLOCK).
+    These two arrays are what ``kernels.ops.quantized_matmul`` consumes:
+    only wire-sized bytes ever reach HBM; the dequant happens per-tile in
+    VMEM inside the kernel."""
+    hdr, buf, off = _parse_wire(wire)
+    if hdr["fmt"] != "q8":
+        raise ValueError(f"fused matmul path needs q8 wire, got {hdr['fmt']!r}")
+    shape = tuple(hdr["shape"])
+    if len(shape) != 2 or shape[1] % BLOCK:
+        raise ValueError(
+            f"fused matmul path needs a 2-D (K, N % {BLOCK} == 0) payload, "
+            f"got shape {shape}")
+    K, N = shape
+    nb = (K * N) // BLOCK
+    s = np.frombuffer(buf, np.float16, count=nb,
+                      offset=off).reshape(K, N // BLOCK)
+    q = np.frombuffer(buf, np.int8, count=K * N,
+                      offset=off + nb * 2).reshape(K, N)
+    return q, s, np.dtype(hdr["dtype"])
+
+
+# ---------------------------------------------------------------------------
+# jnp mirrors (in-graph quantization; operands for the fused Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def quantize_q8_jnp(w):
+    """jnp mirror of ``q8_encode_np`` for a 2-D (K, N % BLOCK == 0) operand:
+    returns (quants int8 (K, N), scales fp16 (K, N//BLOCK))."""
+    import jax.numpy as jnp
+
+    K, N = w.shape
+    if N % BLOCK:
+        raise ValueError(f"N={N} must be a multiple of BLOCK={BLOCK}")
+    blocks = w.astype(jnp.float32).reshape(K, N // BLOCK, BLOCK)
+    s = (jnp.max(jnp.abs(blocks), axis=-1) / 127.0).astype(jnp.float16)
+    s32 = s.astype(jnp.float32)
+    s_safe = jnp.where(s32 > 0, s32, 1.0)
+    q = jnp.clip(jnp.round(blocks / s_safe[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q.reshape(K, N), s
+
+
+def dequantize_q8_jnp(q, s, dtype=None):
+    """Unfused reference for the Pallas kernel: (K, N) int8 + (K, N//BLOCK)
+    scales -> full-precision (K, N)."""
+    import jax.numpy as jnp
+
+    K, N = q.shape
+    w = (q.astype(jnp.float32).reshape(K, N // BLOCK, BLOCK)
+         * s.astype(jnp.float32)[..., None]).reshape(K, N)
+    return w.astype(dtype) if dtype is not None else w
+
+
+# ---------------------------------------------------------------------------
+# the transparent store wrapper
+# ---------------------------------------------------------------------------
+
+
+class _DecodedFuture:
+    """Future adapter: resolves the wrapped store's wire payload and decodes
+    once, on the consumer's thread. Logical bytes are counted at decode so
+    the wrapper's counters reflect arrays actually delivered."""
+
+    def __init__(self, fut: Future, store: "QuantizedArrayStore"):
+        self._fut = fut
+        self._store = store
+        self._lock = threading.Lock()
+        self._value: Optional[np.ndarray] = None
+        self._have = False
+
+    def result(self, timeout=None) -> np.ndarray:
+        wire = self._fut.result(timeout)
+        with self._lock:
+            if not self._have:
+                self._value = decode_array(wire)
+                self._store._count_logical_read(self._value.nbytes)
+                self._have = True
+        return self._value
+
+    def done(self) -> bool:
+        return self._fut.done()
+
+    def exception(self, timeout=None):
+        return self._fut.exception(timeout)
+
+    def add_done_callback(self, fn) -> None:
+        self._fut.add_done_callback(lambda _f: fn(self))
+
+
+class QuantizedArrayStore:
+    """Transparent quantizing wrapper around any ``ArrayStore``.
+
+    Writes encode to wire format in the caller's thread (so the wrapped
+    store's worker threads, pinned staging buffers, and on-disk files all
+    see only wire-sized payloads — the ``PinnedBufferPool`` budget
+    automatically shrinks to wire bytes); reads decode lazily on
+    ``result()``. Same duck-typed surface as ``ArrayStore`` (write / read /
+    roundtrip / flush / close / keys / delete / mark / delta_since /
+    bandwidth_stats / pool / kind), so ``ParamStreamer``, ``PagedKVCache``
+    and the executor run unmodified on top.
+
+    Counter split: the wrapped store keeps counting *wire* bytes
+    (``bytes_read`` / ``bytes_written``); this wrapper adds
+    ``logical_bytes_read`` / ``logical_bytes_written`` — the decoded array
+    bytes — to ``mark``/``delta_since``/``bandwidth_stats``. Plain stores
+    report logical == wire, so consumers can read the logical keys
+    unconditionally.
+    """
+
+    def __init__(self, inner, fmt: str = "q8"):
+        if fmt not in FORMATS:
+            raise ValueError(f"unknown quant format {fmt!r}; known: {FORMATS}")
+        self.inner = inner
+        self.fmt = fmt
+        self._lock = threading.Lock()
+        self.logical_bytes_read = 0
+        self.logical_bytes_written = 0
+        self._check_or_write_metadata()
+
+    # -- format metadata (sidecar record in the wrapped store) ----------
+
+    def _check_or_write_metadata(self) -> None:
+        meta = {"format": self.fmt, "block": BLOCK, "version": 1}
+        if _METADATA_KEY in self.inner.keys():
+            raw = self.inner.read(_METADATA_KEY).result()
+            try:
+                existing = json.loads(bytes(np.asarray(raw, np.uint8)))
+            except ValueError:
+                existing = None
+            if existing != meta:
+                raise ValueError(
+                    f"store already holds quantized rows with metadata "
+                    f"{existing}, but this wrapper is configured for {meta} "
+                    f"— reopen with the matching --param-quant format")
+        else:
+            payload = np.frombuffer(
+                json.dumps(meta, separators=(",", ":")).encode(),
+                np.uint8).copy()
+            self.inner.write(_METADATA_KEY, payload).result()
+
+    # -- counters -------------------------------------------------------
+
+    def _count_logical_read(self, nbytes: int) -> None:
+        with self._lock:
+            self.logical_bytes_read += nbytes
+
+    def _count_logical_write(self, nbytes: int) -> None:
+        with self._lock:
+            self.logical_bytes_written += nbytes
+
+    def mark(self) -> dict:
+        m = self.inner.mark()
+        with self._lock:
+            m["logical_bytes_read"] = self.logical_bytes_read
+            m["logical_bytes_written"] = self.logical_bytes_written
+        return m
+
+    def delta_since(self, mark: dict) -> dict:
+        d = self.inner.delta_since(mark)
+        with self._lock:
+            d["logical_bytes_read"] = (self.logical_bytes_read
+                                       - mark["logical_bytes_read"])
+            d["logical_bytes_written"] = (self.logical_bytes_written
+                                          - mark["logical_bytes_written"])
+        return d
+
+    def bandwidth_stats(self) -> dict:
+        s = self.inner.bandwidth_stats()
+        with self._lock:
+            s["logical_bytes_read"] = self.logical_bytes_read
+            s["logical_bytes_written"] = self.logical_bytes_written
+        s["wire_format"] = self.fmt
+        return s
+
+    # -- the async store surface ----------------------------------------
+
+    def write(self, key: str, arr: np.ndarray) -> Future:
+        arr = np.asarray(arr)
+        self._count_logical_write(arr.nbytes)
+        return self.inner.write(key, encode_array(arr, self.fmt))
+
+    def read(self, key: str) -> "_DecodedFuture":
+        return _DecodedFuture(self.inner.read(key), self)
+
+    def roundtrip(self, key: str, arr: np.ndarray) -> "_DecodedFuture":
+        arr = np.asarray(arr)
+        self._count_logical_write(arr.nbytes)
+        return _DecodedFuture(
+            self.inner.roundtrip(key, encode_array(arr, self.fmt)), self)
+
+    def flush(self) -> None:
+        self.inner.flush()
+
+    def close(self) -> None:
+        self.inner.close()
+
+    def delete(self, key: str) -> None:
+        self.inner.delete(key)
+
+    def keys(self):
+        return [k for k in self.inner.keys() if k != _METADATA_KEY]
+
+    @property
+    def kind(self) -> str:
+        return self.inner.kind
+
+    @property
+    def pool(self):
+        return self.inner.pool
+
+    @property
+    def ratio(self) -> float:
+        """Nominal logical/wire ratio for bf16 payloads (bandwidth math)."""
+        return compression_ratio(self.fmt)
+
+
+def maybe_wrap_store(store, fmt: Optional[str]):
+    """``fmt in (None, "none")`` -> the store unchanged; otherwise the
+    quantizing wrapper. The one-liner every surface calls."""
+    if fmt in (None, "none"):
+        return store
+    return QuantizedArrayStore(store, fmt)

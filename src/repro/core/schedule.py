@@ -46,7 +46,8 @@ PAPER_PEAK_FLOPS = 70e12
 def default_prefetch_layers(num_layers: int, layer_param_count: int,
                             batch_tokens: int, *,
                             slow_bw: float = PAPER_NVME_BYTES_PER_S,
-                            peak_flops: float = PAPER_PEAK_FLOPS) -> int:
+                            peak_flops: float = PAPER_PEAK_FLOPS,
+                            compression_ratio: float = 1.0) -> int:
     """Bandwidth-aware window (paper Secs. 3–4).
 
     One layer's slow-tier fetch moves ``2 * layer_param_count`` bytes (bf16)
@@ -55,6 +56,13 @@ def default_prefetch_layers(num_layers: int, layer_param_count: int,
     The window is the number of layers of compute needed to hide one fetch
     (+1 for the layer in use), clamped so the working set stays strictly
     below full residency whenever the model has more than one layer.
+
+    ``compression_ratio`` > 1 models block-quantized wire formats
+    (``core/qformat.py``): a row in flight pins only ``1/ratio`` of its
+    logical bytes, so the staging budget that sustained the uncompressed
+    window now sustains a ``ratio``×-deeper horizon — the window deepens by
+    the ratio (extra slack against slow-tier latency jitter at no extra
+    pinned cost), still clamped below full residency.
     """
     if num_layers <= 1:
         return 1
@@ -62,6 +70,7 @@ def default_prefetch_layers(num_layers: int, layer_param_count: int,
               / max(slow_bw, 1.0))
     compute_t = 2.0 * 4.0 * max(batch_tokens, 1) * layer_param_count / peak_flops
     window = int(math.ceil(read_t / max(compute_t, 1e-12))) + 1
+    window = int(math.ceil(window * max(compression_ratio, 1.0)))
     return max(1, min(window, num_layers - 1))
 
 

@@ -44,6 +44,7 @@ from repro.core import partition as pt
 from repro.models import common as cm
 from repro.models import transformer
 from repro.optim import adam as adam_mod
+from repro.optim import compression
 
 
 def _all_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -144,6 +145,28 @@ class ExplicitZero3Engine:
     # state
     # ------------------------------------------------------------------
 
+    @property
+    def grad_compress(self) -> bool:
+        """int8 + error-feedback wire format on the replicated-grad reduce
+        (``optim/compression.py``) — carried as a rank-stacked residual."""
+        return self.run.parallel.grad_compression == "int8"
+
+    def _g_err_zeros(self):
+        """Fresh rank-local error-feedback residuals: one fp32 copy of each
+        'other' grad leaf per rank, stacked on a leading dp dim so each
+        rank's residual stays its own across steps (the residual is the
+        rank's private quantization error, never reduced)."""
+        other_defs = {"embed": self.defs["embed"], "ln_f": self.defs["ln_f"]}
+        leaf = lambda x: isinstance(x, pt.ParamDef)
+        return jax.tree.map(
+            lambda d: jnp.zeros((self.dp,) + tuple(d.shape), jnp.float32),
+            other_defs, is_leaf=leaf)
+
+    def init_g_err(self):
+        """Zero residual tree placed on its sharding (restore path)."""
+        sh = {"g_err": self.state_shardings()["g_err"]}
+        return jax.device_put({"g_err": self._g_err_zeros()}, sh)["g_err"]
+
     def init_state(self, rng: jax.Array):
         params = pt.init_tree(rng, self.defs)
         flat = self._flatten_blocks(params["blocks"], jnp.bfloat16)  # (L, P)
@@ -154,6 +177,8 @@ class ExplicitZero3Engine:
             "other_opt": adam_mod.init_state(other),
             "step": jnp.zeros((), jnp.int32),
         }
+        if self.grad_compress:
+            state["g_err"] = self._g_err_zeros()
         if not self.offgraph:  # offgraph: master/m/v live in the ArrayStore
             flat32 = flat.astype(jnp.float32)
             state.update(master=flat32, m=jnp.zeros_like(flat32),
@@ -193,6 +218,9 @@ class ExplicitZero3Engine:
             "other": other, "other_opt": other_opt,
             "step": sh(P()),
         }
+        if self.grad_compress:
+            # rank-stacked residuals: leading dp dim split over all axes
+            out["g_err"] = jax.tree.map(lambda _: sh(P(self.axis)), other)
         if not self.offgraph:
             opt_sh = sh(flat_spec)
             if self.opt_host_kind:  # optimizer states resident in pinned host DRAM
@@ -331,7 +359,24 @@ class ExplicitZero3Engine:
             loss = jax.lax.psum(loss_scaled, axis)
             # g_flat is already the reduce-scattered local shard (transpose of
             # all_gather); g_other needs the explicit dp reduction:
-            g_other = jax.tree.map(lambda g: jax.lax.psum(g, axis), g_other)
+            new_g_err = None
+            if pc.grad_compression == "int8":
+                # int8 wire format + error feedback on the replicated-grad
+                # reduce (optim/compression.py). psum_compressed returns the
+                # MEAN over ranks; scale by dp to recover psum semantics.
+                # Each rank's residual (its private quantization error) rides
+                # in the (dp, ...)-stacked g_err state leaf, local slice [0].
+                flat_g, tdef = jax.tree.flatten(g_other)
+                flat_e = jax.tree.leaves(state["g_err"])
+                red, errs = [], []
+                for g, e in zip(flat_g, flat_e):
+                    r, ne = compression.psum_compressed(g, axis, e[0])
+                    red.append((r.astype(jnp.float32) * dp).astype(g.dtype))
+                    errs.append(ne.astype(jnp.float32)[None])
+                g_other = jax.tree.unflatten(tdef, red)
+                new_g_err = jax.tree.unflatten(tdef, errs)
+            else:
+                g_other = jax.tree.map(lambda g: jax.lax.psum(g, axis), g_other)
 
             step = state["step"] + 1
             lr = adam_mod.lr_at(tc, step)
@@ -350,6 +395,8 @@ class ExplicitZero3Engine:
                     "other": new_other, "other_opt": new_other_opt,
                     "step": step,
                 }
+                if new_g_err is not None:
+                    new_state["g_err"] = new_g_err
                 return new_state, g32, metrics
 
             # --- partitioned Adam on local shards (shard-parallel) ---
@@ -366,6 +413,8 @@ class ExplicitZero3Engine:
                 "other": new_other, "other_opt": new_other_opt,
                 "step": step,
             }
+            if new_g_err is not None:
+                new_state["g_err"] = new_g_err
             return new_state, metrics
 
         flat_spec = self._flat_spec()
@@ -375,6 +424,8 @@ class ExplicitZero3Engine:
             "flat": flat_spec,
             "other": other_specs, "other_opt": opt_specs, "step": rep,
         }
+        if self.grad_compress:
+            state_specs["g_err"] = jax.tree.map(lambda _: P(axis), other_specs)
         if not grads_only:
             state_specs.update(master=flat_spec, m=flat_spec, v=flat_spec)
         batch_spec = {"tokens": P(self.axis, None), "labels": P(self.axis, None)}
@@ -443,6 +494,11 @@ class ExplicitZero3Engine:
         assert self.run.parallel.partition_mode == "allgather", (
             "layered epochs need the bandwidth-centric (allgather) row "
             "layout; the broadcast baseline stores whole layers per owner")
+        assert not self.grad_compress, (
+            "grad_compression='int8' wires into the monolithic step's "
+            "replicated-grad reduce; the layered epoch's per-row reduce-"
+            "scatter is implicit in the all-gather transpose and is not "
+            "compressed — run it with grad_compression='none'")
         cfg = self.run.model
         tc = self.run.train
         axis, dp = self.axis, self.dp
@@ -554,6 +610,12 @@ class ExplicitZero3Engine:
             "other_opt": opt_specs,
             "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=sh(P())),
         }
+        if self.grad_compress:
+            state["g_err"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (self.dp,) + tuple(s.shape), jnp.float32,
+                    sharding=sh(P(self.axis))),
+                other_specs)
         if not self.offgraph:
             state.update({k: jax.ShapeDtypeStruct((L, Pl), jnp.float32,
                                                   sharding=shardings[k])

@@ -52,6 +52,14 @@ def tiled_matmul(x, w, **kw):
     return _mm.tiled_matmul(x, w, **kw)
 
 
+def quantized_matmul(x, q, scales, **kw):
+    """Fused dequant-matmul on q8 wire operands (int8 quants + per-block
+    fp16 scales, see ``core/qformat.py``): the full-precision weight never
+    materializes in HBM — tiles dequantize in VMEM ahead of the MXU dot."""
+    kw.setdefault("interpret", _INTERPRET)
+    return _mm.quantized_matmul(x, q, scales, **kw)
+
+
 def flash_attention(q, k, v, *, causal=True, **kw):
     kw.setdefault("interpret", _INTERPRET)
     return _fa.flash_attention(q, k, v, causal=causal, **kw)

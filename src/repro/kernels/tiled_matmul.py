@@ -33,6 +33,29 @@ def _mm_kernel(x_ref, w_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _qmm_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, qblock):
+    """Fused dequant-matmul: the weight tile arrives as int8 quants +
+    per-block fp16 scales (the q8 wire layout, blocks along N) and is
+    dequantized in VMEM right before the MXU dot — the full-precision W
+    never exists in HBM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bk, bn = q_ref.shape
+    s = s_ref[...].astype(jnp.float32)  # (bk, bn // qblock)
+    w = (q_ref[...].astype(jnp.float32).reshape(bk, bn // qblock, qblock)
+         * s[:, :, None]).reshape(bk, bn)
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def tiled_matmul(x, w, *, bm: int = 256, bn: int = 256, bk: int = 512,
                  interpret: bool = True):
@@ -61,4 +84,49 @@ def tiled_matmul(x, w, *, bm: int = 256, bn: int = 256, bk: int = 512,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w)
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def quantized_matmul(x, q, scales, *, bm: int = 256, bn: int = 256,
+                     bk: int = 512, interpret: bool = True):
+    """x: (M, K) @ dequant(q: (K, N) int8, scales: (K, N//qblock)) -> (M, N).
+
+    ``q``/``scales`` are the q8 wire layout of ``core/qformat.py``
+    (``wire_matmul_operands`` / ``quantize_q8_jnp``): absmax/127 fp16 scales
+    over blocks of consecutive N elements. Only wire-sized bytes transit to
+    the kernel; each (bk, bn) weight tile dequantizes in VMEM scratch-free
+    right before its MXU dot. N must be a multiple of the quant block."""
+    M, K = x.shape
+    K2, N = q.shape
+    assert K == K2
+    Kb, nb = scales.shape
+    assert Kb == K and nb * (N // nb) == N and N % nb == 0
+    qblock = N // nb
+    bm, bk = min(bm, M), min(bk, K)
+    bn = max(qblock, min(bn, N) // qblock * qblock)  # whole quant blocks
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        # zero scales on padding decode to zero weights — the contraction
+        # is unchanged
+        q = jnp.pad(q, ((0, pk), (0, pn)))
+        scales = jnp.pad(scales, ((0, pk), (0, pn // qblock)))
+    Mp, Kp, Np = M + pm, K + pk, N + pn
+    grid = (Mp // bm, Np // bn, Kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, qblock=qblock),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn // qblock), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, q, scales)
     return out[:M, :N]

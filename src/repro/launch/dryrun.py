@@ -184,18 +184,25 @@ def smoke_exec(args) -> None:
                                  grad_tier=args.offload_grad,
                                  nvme_dir=nvme_dir,
                                  prefetch_layers=args.prefetch_layers,
+                                 param_quant=args.param_quant,
                                  param_read_ahead=args.read_ahead,
                                  nvme_workers=args.nvme_workers),
             train=tc)
     mesh = make_local_mesh(1, 1)
-    ex = InfinityExecutor(run, mesh, plan=plan)
-    state = ex.init_state(jax.random.PRNGKey(0))
-    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
-             "labels": jnp.ones((2, 16), jnp.int32)}
-    step = ex.make_train_step()
-    metrics = {}
-    for _ in range(args.exec_steps):
-        state, metrics = step(state, batch)
+
+    def _run_steps(run_cfg, run_plan=None):
+        ex = InfinityExecutor(run_cfg, mesh, plan=run_plan)
+        state = ex.init_state(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+                 "labels": jnp.ones((2, 16), jnp.int32)}
+        step = ex.make_train_step()
+        metrics, losses = {}, []
+        for _ in range(args.exec_steps):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+        return ex, metrics, losses
+
+    ex, metrics, losses = _run_steps(run, plan)
     peak = int(metrics.get("peak_resident_param_bytes", -1))
     total = ex.total_param_bytes
     engine = run.parallel.engine
@@ -217,6 +224,37 @@ def smoke_exec(args) -> None:
         print(f"plan gate: feasible=True measured_peak={peak} "
               f"predicted_peak={pred:.0f} "
               f"residency_ok={metrics.get('plan_residency_ok', 'n/a')}")
+    quant = run.offload.param_quant
+    if quant != "none":
+        if param_tier != "nvme":
+            print(f"smoke-exec: param_quant={quant} only shapes the slow-tier "
+                  "wire — no nvme param store here, quant gate skipped")
+        else:
+            import numpy as np
+
+            wire = int(metrics["param_in_wire_bytes"])
+            logical = int(metrics["param_in_bytes"])
+            if not 0 < wire < logical:
+                raise SystemExit(
+                    f"quant gate: wire traffic {wire} not strictly below "
+                    f"logical {logical} — {quant} rows are not compressed "
+                    "on the wire")
+            if wire > 0.6 * logical:
+                raise SystemExit(
+                    f"quant gate: wire/logical ratio {wire / logical:.3f} "
+                    f"exceeds 0.6 — {quant} encode is not paying for itself")
+            base_run = run.replace(offload=dataclasses.replace(
+                run.offload, param_quant="none",
+                nvme_dir=tempfile.mkdtemp(prefix="repro_smoke_nvme_bf16")))
+            _, _, base_losses = _run_steps(base_run)
+            if not np.allclose(losses, base_losses, rtol=5e-2, atol=5e-2):
+                raise SystemExit(
+                    f"quant gate: {quant} loss trajectory {losses} diverged "
+                    f"from the bf16 baseline {base_losses} beyond 5e-2")
+            print(f"quant gate: {quant} wire/logical="
+                  f"{wire / logical:.3f} (<=0.6) "
+                  f"max_loss_delta="
+                  f"{max(abs(a - b) for a, b in zip(losses, base_losses)):.2e}")
     if param_tier == "nvme":
         if engine != "zero3":
             # the pjit engine's scheduler bounds host *staging* only — its
@@ -272,6 +310,11 @@ def main() -> None:
     ap.add_argument("--prefetch-layers", type=int, default=0,
                     help="layer-scheduler window for slow-tier params "
                          "(0 = bandwidth-aware auto)")
+    ap.add_argument("--param-quant", default="none",
+                    choices=["none", "q8", "q4"],
+                    help="block-quantized wire format for slow-tier param "
+                         "rows; under --smoke-exec also runs a bf16 baseline "
+                         "and gates on trajectory parity + wire < logical")
     ap.add_argument("--read-ahead", type=int, default=2,
                     help="slow-tier param reads in flight beyond the window")
     ap.add_argument("--nvme-workers", type=int, default=2,
@@ -303,6 +346,7 @@ def main() -> None:
                             grad_tier=args.offload_grad,
                             opt_tier=args.offload,
                             prefetch_layers=args.prefetch_layers,
+                            param_quant=args.param_quant,
                             param_read_ahead=args.read_ahead,
                             nvme_workers=args.nvme_workers)
     overrides = {}

@@ -34,7 +34,7 @@ import numpy as np
 from repro import compat, configs
 from repro import plan as plan_mod
 from repro.config import ParallelConfig, RunConfig, ShapeConfig
-from repro.core import kvcache
+from repro.core import kvcache, qformat
 from repro.core.engine import ZeroInfinityEngine
 from repro.core.offload import HostArrayStore, NvmeStore, PinnedBufferPool
 from repro.launch.mesh import make_local_mesh
@@ -65,6 +65,11 @@ def _parse(argv=None):
                     help="tokens per paged KV block (0 = auto)")
     ap.add_argument("--kv-dir", default="/tmp/repro_kv",
                     help="directory backing the NVMe KV tier")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=["none", "q8", "q4"],
+                    help="block-quantized wire format for parked sequences' "
+                         "KV blocks (core/qformat.py): waiting KV costs "
+                         "~1/2 (q8) or ~1/3 (q4) of the slow tier")
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
@@ -108,6 +113,10 @@ def run_serve(args, argv=None) -> dict:
                           workers=run.offload.nvme_workers)
     else:
         store = HostArrayStore(pool=pool, workers=2)
+    # parked KV rides the same wire format as slow-tier params: blocks are
+    # encoded on park and decoded on admission, so the waiting-sequence
+    # footprint (and flush/fetch traffic) shrinks by the compression ratio
+    store = qformat.maybe_wrap_store(store, args.kv_quant)
     seq_names = (("k", "v") if cfg.family in kvcache.SEQ_CACHE_FAMILIES
                  else ())
     kv = kvcache.PagedKVCache(store, block_tokens=block_tokens,
@@ -262,8 +271,12 @@ def run_serve(args, argv=None) -> dict:
         "history": history,
         "kv": {
             "resident_bytes": resident,
-            "in_bytes": int(stats["bytes_read"]),
-            "out_bytes": int(stats["bytes_written"]),
+            "in_bytes": int(stats.get("logical_bytes_read",
+                                      stats["bytes_read"])),
+            "out_bytes": int(stats.get("logical_bytes_written",
+                                       stats["bytes_written"])),
+            "in_wire_bytes": int(stats["bytes_read"]),
+            "out_wire_bytes": int(stats["bytes_written"]),
             "parked_peak_bytes": kv.parked_bytes(),
             "pinned_peak_bytes": int(pool.peak_resident),
             "pinned_budget_bytes": int(run.offload.pinned_buffer_mb) << 20,
@@ -297,8 +310,13 @@ def main(argv=None) -> None:
           f"{out['admissions']} admissions (+{t['admit_s']*1e3:.1f} ms "
           f"KV streaming)")
     kvm = out["kv"]
+    wire = ""
+    if kvm["in_wire_bytes"] != kvm["in_bytes"] or \
+            kvm["out_wire_bytes"] != kvm["out_bytes"]:
+        wire = (f"wire in {kvm['in_wire_bytes']} B / "
+                f"out {kvm['out_wire_bytes']} B | ")
     print(f"kv[{out['kv_tier']}]: resident {kvm['resident_bytes']} B | "
-          f"in {kvm['in_bytes']} B | out {kvm['out_bytes']} B | "
+          f"in {kvm['in_bytes']} B | out {kvm['out_bytes']} B | {wire}"
           f"pinned peak {kvm['pinned_peak_bytes']} B "
           f"(budget {kvm['pinned_budget_bytes']} B)")
     for s in range(min(n_seqs, 4)):

@@ -57,6 +57,15 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--prefetch-layers", type=int, default=0,
                     help="layer-scheduler window for slow-tier params "
                          "(0 = bandwidth-aware auto from the paper's model)")
+    ap.add_argument("--param-quant", default="none",
+                    choices=["none", "q8", "q4"],
+                    help="block-quantized wire format for slow-tier param "
+                         "rows (core/qformat.py): shrinks NVMe traffic and "
+                         "pinned staging by the compression ratio")
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "int8"],
+                    help="int8 + error-feedback wire format on the zero3 "
+                         "replicated-grad reduce (optim/compression.py)")
     ap.add_argument("--read-ahead", type=int, default=2,
                     help="slow-tier param reads in flight beyond the window")
     ap.add_argument("--nvme-workers", type=int, default=2,
@@ -88,18 +97,22 @@ def make_run(args):
         run = plan.to_run_config(train=tc, nvme_dir=args.nvme_dir,
                                  overlap=not args.no_overlap)
         # non-plan parallelism knobs stay CLI-driven under --plan auto
-        run = run.replace(parallel=dataclasses.replace(
-            run.parallel, zero_stage=args.zero_stage))
+        par_kw = {"zero_stage": args.zero_stage}
+        if args.grad_compress != "none":
+            par_kw["grad_compression"] = args.grad_compress
+        run = run.replace(parallel=dataclasses.replace(run.parallel, **par_kw))
         return run, plan
     run = RunConfig(
         model=cfg,
         parallel=make_parallel(args.engine, zero_stage=args.zero_stage,
-                               grad_accum=args.grad_accum),
+                               grad_accum=args.grad_accum,
+                               grad_compression=args.grad_compress),
         offload=make_offload(opt_tier=args.offload_opt,
                              param_tier=args.offload_param,
                              grad_tier=args.offload_grad, nvme_dir=args.nvme_dir,
                              overlap=not args.no_overlap,
                              prefetch_layers=args.prefetch_layers,
+                             param_quant=args.param_quant,
                              param_read_ahead=args.read_ahead,
                              nvme_workers=args.nvme_workers,
                              pinned_buffer_mb=args.pinned_buffer_mb),

@@ -20,7 +20,10 @@ def _pad_len(n: int, block: int) -> int:
 
 
 def quantize_int8(x: jax.Array, block: int = BLOCK):
-    """x: any shape -> (q int8 (nb, block), scales fp32 (nb,), orig shape)."""
+    """x: any shape -> (q int8 (nb, block), scales fp32 (nb,), struct).
+
+    ``struct`` is a ``ShapeDtypeStruct`` recording the original shape AND
+    dtype, so ``dequantize_int8`` can restore both on the round-trip."""
     flat = x.reshape(-1).astype(jnp.float32)
     pad = _pad_len(flat.shape[0], block)
     flat = jnp.pad(flat, (0, pad))
@@ -28,15 +31,23 @@ def quantize_int8(x: jax.Array, block: int = BLOCK):
     scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
     scale = jnp.maximum(scale, 1e-12)
     q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
-    return q, scale[:, 0], x.shape
+    return q, scale[:, 0], jax.ShapeDtypeStruct(x.shape, x.dtype)
 
 
-def dequantize_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape,
+                    dtype=None) -> jax.Array:
+    """Inverse of ``quantize_int8``. ``shape`` is the struct it returned (or
+    a plain shape tuple); the result is cast back to the recorded — or
+    explicitly passed — dtype. Regression: this used to return fp32
+    regardless of what was quantized, silently upcasting bf16 round-trips."""
+    if dtype is None:
+        dtype = getattr(shape, "dtype", jnp.float32)
+    shape = getattr(shape, "shape", shape)
     flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
     n = 1
     for s in shape:
         n *= s
-    return flat[:n].reshape(shape)
+    return flat[:n].reshape(shape).astype(dtype)
 
 
 def psum_compressed(x: jax.Array, axis_name: str, error: jax.Array | None = None):
@@ -47,17 +58,18 @@ def psum_compressed(x: jax.Array, axis_name: str, error: jax.Array | None = None
     (~1.016 B/element) vs bf16 psum (2 B moved twice: reduce-scatter +
     all-gather). Returns (reduced x, new error residual).
     """
+    out_dtype = x.dtype
     if error is not None:
         x = x + error
-    q, scale, shape = quantize_int8(x)
-    local = dequantize_int8(q, scale, shape)
+    q, scale, struct = quantize_int8(x)
+    local = dequantize_int8(q, scale, struct, dtype=x.dtype)
     new_error = x - local
     qs = jax.lax.all_gather(q, axis_name)  # (n, nb, BLOCK) int8 — the wire payload
     ss = jax.lax.all_gather(scale, axis_name)  # (n, nb) fp32 — 1/256 overhead
     n = qs.shape[0]
     flat = jnp.sum(qs.astype(jnp.float32) * ss[..., None], axis=0).reshape(-1)
     numel = 1
-    for s in shape:
+    for s in struct.shape:
         numel *= s
-    total = flat[:numel].reshape(shape)
-    return total / n, new_error
+    total = flat[:numel].reshape(struct.shape)
+    return (total / n).astype(out_dtype), new_error

@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.config import (ModelConfig, OffloadConfig, RunConfig, SHAPES,
                           ShapeConfig, TrainConfig, make_parallel)
-from repro.core import model_math, schedule
+from repro.core import model_math, qformat, schedule
 
 # Paper Fig. 2b nominal per-device rates, used when a bandwidth is not
 # overridden (none of them are detectable from the backend). NVMe/peak come
@@ -330,6 +330,10 @@ class InfinityPlan:
     kv_slots: int = 0
     kv_block_tokens: int = 0
     kv_prefetch_blocks: int = 2
+    # block-quantized wire format for slow-tier param rows (core/qformat.py):
+    # "none" | "q8" | "q4". Shrinks predicted wire traffic and the pinned
+    # budget by the compression ratio and deepens the prefetch window.
+    param_quant: str = "none"
     objective: str = "throughput"
     feasible: bool = True
     predicted: Tuple[Tuple[str, float], ...] = ()
@@ -361,12 +365,14 @@ class InfinityPlan:
         t = self.tiers
         kv = (f"kv={self.kv_tier}x{self.kv_slots}"
               f"/b{self.kv_block_tokens} " if self.kv_slots else "")
+        quant = (f"quant={self.param_quant} "
+                 if self.param_quant != "none" else "")
         return (f"plan[{self.model.arch}/{self.shape.name}] "
                 f"engine={self.engine} tiers(param/grad/opt/act)="
                 f"{t['param']}/{t['grad']}/{t['opt']}/{t['act']} "
                 f"window={self.prefetch_layers} read_ahead={self.read_ahead} "
                 f"remat={self.remat} grad_accum={self.grad_accum} "
-                f"pinned={self.pinned_buffer_mb}MiB " + kv +
+                f"pinned={self.pinned_buffer_mb}MiB " + quant + kv +
                 f"eff~{self.predictions.get('efficiency', 1.0):.3f} "
                 f"feasible={self.feasible}")
 
@@ -398,7 +404,8 @@ class InfinityPlan:
             nvme_dir=nvme_dir, pinned_buffer_mb=self.pinned_buffer_mb,
             overlap=overlap, param_read_ahead=self.read_ahead,
             prefetch_layers=self.prefetch_layers,
-            nvme_workers=self.nvme_workers)
+            nvme_workers=self.nvme_workers,
+            param_quant=self.param_quant)
         return RunConfig(model=self.model, parallel=parallel,
                          offload=offload, train=train or TrainConfig())
 
@@ -443,7 +450,7 @@ class InfinityPlan:
 OVERRIDABLE = ("param_tier", "grad_tier", "opt_tier", "act_tier", "engine",
                "prefetch_layers", "read_ahead", "nvme_workers",
                "pinned_buffer_mb", "remat", "grad_accum",
-               "kv_tier", "kv_slots", "kv_block_tokens")
+               "kv_tier", "kv_slots", "kv_block_tokens", "param_quant")
 
 
 def _resolve_model(model: Union[str, ModelConfig]) -> ModelConfig:
@@ -775,8 +782,16 @@ def plan_run(model: Union[str, ModelConfig], shape: Union[str, ShapeConfig],
         "nvme_workers": nvme_workers, "pinned_buffer_mb": pinned_buffer_mb,
         "remat": remat, "grad_accum": grad_accum,
         "kv_tier": kv_tier, "kv_slots": kv_slots,
-        "kv_block_tokens": kv_block_tokens,
+        "kv_block_tokens": kv_block_tokens, "param_quant": "none",
     }
+    if tiers["param"] == "nvme":
+        decisions.append(Decision(
+            "param_quant", "none",
+            "lossless bf16 rows on the wire by default; q8/q4 "
+            "(core/qformat.py) cut slow-tier traffic "
+            f"{qformat.compression_ratio('q8'):.2f}x/"
+            f"{qformat.compression_ratio('q4'):.2f}x at bounded per-block "
+            "error — opt in via --param-quant"))
     for c in OFFLOAD_ORDER:
         if tiers[c] == "device":
             decisions.append(Decision(
@@ -828,6 +843,42 @@ def plan_run(model: Union[str, ModelConfig], shape: Union[str, ShapeConfig],
             warnings.append(
                 "override param_tier='nvme': re-derived read_ahead/"
                 "nvme_workers/pinned_buffer_mb for the NVMe stream")
+    pq = str(fields["param_quant"])
+    if pq != "none":
+        if pq not in qformat.FORMATS:
+            raise ValueError(
+                f"param_quant={pq!r}: must be one of "
+                f"{('none',) + tuple(qformat.FORMATS)}")
+        ratio = qformat.compression_ratio(pq)
+        if fields["param_tier"] != "nvme":
+            warnings.append(
+                f"param_quant={pq!r} has no effect with param_tier="
+                f"{fields['param_tier']!r}: only slow-tier param rows cross "
+                "a store wire (device/host-tier params move in-graph)")
+        else:
+            if "prefetch_layers" not in overrides:
+                w = schedule.default_prefetch_layers(
+                    sb.n_layers, sb.layer_params, batch_tokens,
+                    slow_bw=max(hw.tier_bandwidth("nvme"), 1.0),
+                    peak_flops=hw.peak_flops, compression_ratio=ratio)
+                if fields["engine"] == "zero3":
+                    # same capacity clamp as the derived window: resident
+                    # rows decode to full bf16 on device regardless of the
+                    # wire format
+                    cap_rows = int((dev_budget - load("device", act_b))
+                                   // max(row_bytes, 1))
+                    if 1 <= cap_rows < w:
+                        w = cap_rows
+                fields["prefetch_layers"] = w
+            bits = qformat.WIRE_BYTES_PER_ELEM[pq] * 8.0
+            decisions.append(Decision(
+                "param_quant", pq,
+                f"{pq} block-quantized wire ({bits:.1f} b/elem vs 16 bf16, "
+                f"{ratio:.2f}x): one row fetch shrinks to "
+                f"{_fmt_bytes(row_bytes / ratio)}, the pinned stage holds "
+                f"{ratio:.2f}x more rows, window deepens to "
+                f"{fields['prefetch_layers']} — bounded per-block "
+                f"quantization error (Sec. 4 arithmetic on wire bytes)"))
     _check_override_feasibility(fields, sb, hw, model, shape, warnings)
 
     # ---- feasibility --------------------------------------------------
@@ -898,6 +949,11 @@ def _check_override_feasibility(fields, sb: StateBytes, hw: HardwareSpec,
     if fields.get("kv_tier") not in _TIERS:
         raise ValueError(
             f"kv_tier={fields.get('kv_tier')!r}: must be one of {_TIERS}")
+    pq = str(fields.get("param_quant", "none"))
+    if pq not in ("none",) + tuple(qformat.FORMATS):
+        raise ValueError(
+            f"param_quant={pq!r}: must be one of "
+            f"{('none',) + tuple(qformat.FORMATS)}")
     if int(fields.get("kv_slots", 0) or 0) > shape.global_batch:
         warnings.append(
             f"kv_slots={fields['kv_slots']} exceeds the shape's "
@@ -935,6 +991,7 @@ CLI_FLAG_FIELDS = {
     "--offload-param": "param_tier",
     "--offload-grad": "grad_tier",
     "--prefetch-layers": "prefetch_layers",
+    "--param-quant": "param_quant",
     "--read-ahead": "read_ahead",
     "--nvme-workers": "nvme_workers",
     "--pinned-buffer-mb": "pinned_buffer_mb",
@@ -1095,6 +1152,15 @@ def _predict(fields, sb: StateBytes, hw: HardwareSpec, model: ModelConfig,
         p_bytes = float(PARAM_BYTES_PP * streamed)
         out["param_step_read_bytes"] = 2.0 * p_bytes  # fwd + bwd loads
         out["param_step_write_bytes"] = p_bytes
+        # wire traffic: what actually crosses the slow link — logical /
+        # compression ratio under a quantized wire format (1.0 for "none",
+        # and the store wire only exists on the nvme param tier)
+        ratio = (qformat.compression_ratio(
+            str(fields.get("param_quant", "none")))
+            if tiers["param"] == "nvme" else 1.0)
+        out["param_step_read_wire_bytes"] = 2.0 * p_bytes / ratio
+        out["param_step_write_wire_bytes"] = p_bytes / ratio
+        out["param_compression_ratio"] = ratio
     if tiers["grad"] != "device":
         out["grad_step_write_bytes"] = float(GRAD_BYTES_PP * streamed)
     if tiers["opt"] != "device":

@@ -36,11 +36,20 @@ def kv_step_metrics(delta: dict, resident_bytes: int) -> dict:
     reads are blocks streaming *in* to refill a decode slot (admission),
     writes are sequences parked *out* to the slow tier. ``resident_bytes``
     is the device-resident slot-cache footprint. All values are per-step
-    deltas, never cumulative."""
+    deltas, never cumulative.
+
+    ``kv_in_bytes`` / ``kv_out_bytes`` are *logical* bytes (the decoded
+    blocks the cache moved); ``kv_*_wire_bytes`` is what actually crossed
+    the tier link — smaller when the store is wrapped in a quantized wire
+    format (``core/qformat.py``), identical otherwise."""
+    wire_r = int(delta.get("bytes_read", 0))
+    wire_w = int(delta.get("bytes_written", 0))
     return {
         "kv_resident_bytes": int(resident_bytes),
-        "kv_in_bytes": int(delta.get("bytes_read", 0)),
-        "kv_out_bytes": int(delta.get("bytes_written", 0)),
+        "kv_in_bytes": int(delta.get("logical_bytes_read", wire_r)),
+        "kv_out_bytes": int(delta.get("logical_bytes_written", wire_w)),
+        "kv_in_wire_bytes": wire_r,
+        "kv_out_wire_bytes": wire_w,
         "kv_in_gbps": float(delta.get("read_gbps", 0.0)),
         "kv_out_gbps": float(delta.get("write_gbps", 0.0)),
     }

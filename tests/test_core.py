@@ -160,6 +160,18 @@ def test_quantize_property(n, scale):
     assert np.max(np.abs(np.asarray(back - x))) <= per_block_max / 127 + 1e-9
 
 
+def test_dequantize_int8_preserves_dtype():
+    """Regression: the round-trip must hand back the caller's dtype — a bf16
+    gradient that comes back fp32 silently doubles the reduce payload."""
+    for dtype in (jnp.bfloat16, jnp.float32, jnp.float16):
+        x = (jax.random.normal(jax.random.PRNGKey(3), (512,), jnp.float32)
+             .astype(dtype))
+        q, s, shape = compression.quantize_int8(x)
+        back = compression.dequantize_int8(q, s, shape)
+        assert back.dtype == dtype, dtype
+        assert back.shape == x.shape
+
+
 def test_psum_compressed_error_feedback():
     """Under vmap-with-axis (2 'ranks'), compressed mean-reduce must equal the
     true mean within quantization error, and error feedback must carry the

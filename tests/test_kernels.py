@@ -77,6 +77,51 @@ def test_flash_attention(B, H, KV, Sq, Sk, D, causal, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("M,K,N,blocks", [
+    (64, 128, 256, (64, 128, 64)),
+    (100, 96, 64, (64, 64, 64)),     # non-divisible M, K
+    (8, 32, 32, (8, 32, 32)),        # single quant block per row
+])
+def test_quantized_matmul_matches_dequant_reference(M, K, N, blocks):
+    """The fused dequant-matmul on q8 wire operands equals matmul against
+    the unfused dequantized weight — the kernel's VMEM dequant is exact."""
+    from repro.core import qformat
+
+    bm, bn, bk = blocks
+    x = (jax.random.normal(jax.random.PRNGKey(11), (M, K)) * 0.3
+         ).astype(jnp.bfloat16)
+    w = (jax.random.normal(jax.random.PRNGKey(12), (K, N)) * 0.3
+         ).astype(jnp.bfloat16)
+    q, s = qformat.quantize_q8_jnp(w)
+    y1 = ops.quantized_matmul(x, q, s, bm=bm, bn=bn, bk=bk)
+    ref_w = qformat.dequantize_q8_jnp(q, s)
+    y2 = x.astype(jnp.float32) @ ref_w
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_quantized_matmul_wire_operands_end_to_end():
+    """A wire payload from the numpy encoder feeds the kernel directly —
+    the decode-to-full-precision step never happens."""
+    import ml_dtypes
+
+    from repro.core import qformat
+
+    rng = np.random.default_rng(13)
+    w = (rng.standard_normal((64, 128)) * 0.5).astype(ml_dtypes.bfloat16)
+    q, s, out_dtype = qformat.wire_matmul_operands(
+        qformat.encode_array(w, "q8"))
+    x = (rng.standard_normal((16, 64)) * 0.5).astype(np.float32)
+    y = ops.quantized_matmul(jnp.asarray(x), jnp.asarray(q), jnp.asarray(s),
+                             bm=16, bn=64, bk=64)
+    ref = x @ qformat.decode_array(
+        qformat.encode_array(w, "q8")).astype(np.float32)
+    assert out_dtype == w.dtype
+    np.testing.assert_allclose(np.asarray(y, np.float32), ref,
+                               rtol=2e-2, atol=2e-2)
+
+
 @settings(max_examples=10, deadline=None)
 @given(m=st.integers(1, 65), k=st.integers(1, 65), n=st.integers(1, 65))
 def test_tiled_matmul_property(m, k, n):

@@ -167,6 +167,65 @@ def test_override_unknown_field_raises():
         plan_run(FULL, TRAIN_4K, HardwareSpec(), overrides={"nope": 1})
 
 
+# ---------------------------------------------------------------------------
+# quantized tier transport in the plan arithmetic
+# ---------------------------------------------------------------------------
+
+_NVME_HW = HardwareSpec(n_devices=16, device_mem=1e9, host_mem=8e9,
+                        nvme_capacity=28e12)
+
+
+def test_param_quant_override_deepens_window_and_shrinks_wire():
+    from repro.core import qformat
+
+    base = plan_run(FULL, TRAIN_4K, _NVME_HW)
+    assert base.param_tier == "nvme" and base.param_quant == "none"
+    p = plan_run(FULL, TRAIN_4K, _NVME_HW, overrides={"param_quant": "q8"})
+    ratio = qformat.compression_ratio("q8")
+    assert p.param_quant == "q8"
+    # pinned staging holds ratio-x more wire rows -> the window deepens
+    assert p.prefetch_layers > base.prefetch_layers
+    # predicted wire traffic = logical / ratio; logical is unchanged
+    assert p.predictions["param_step_read_bytes"] == \
+        base.predictions["param_step_read_bytes"]
+    assert p.predictions["param_step_read_wire_bytes"] == pytest.approx(
+        p.predictions["param_step_read_bytes"] / ratio)
+    assert p.predictions["param_step_write_wire_bytes"] == pytest.approx(
+        p.predictions["param_step_write_bytes"] / ratio)
+    assert p.predictions["param_compression_ratio"] == pytest.approx(ratio)
+    # the decision trail names the format and the deepened window
+    assert p.why("param_quant") and "q8" in p.why("param_quant")
+
+
+def test_param_quant_explicit_window_override_wins():
+    p = plan_run(FULL, TRAIN_4K, _NVME_HW,
+                 overrides={"param_quant": "q8", "prefetch_layers": 3})
+    assert p.prefetch_layers == 3
+
+
+def test_param_quant_off_nvme_warns_no_effect():
+    hw = HardwareSpec(n_devices=16, device_mem=32e9, host_mem=1.5e12,
+                      nvme_capacity=28e12)
+    p = plan_run(FULL, TRAIN_4K, hw, overrides={"param_quant": "q8"})
+    assert p.param_tier == "device"
+    assert any("param_quant" in w and "no effect" in w for w in p.warnings)
+    assert p.predictions.get("param_compression_ratio", 1.0) == 1.0
+
+
+def test_param_quant_invalid_value_raises():
+    with pytest.raises(ValueError, match="param_quant"):
+        plan_run(FULL, TRAIN_4K, _NVME_HW, overrides={"param_quant": "q2"})
+
+
+def test_param_quant_roundtrips_json_and_run_config():
+    p = plan_run(FULL, TRAIN_4K, _NVME_HW, overrides={"param_quant": "q4"})
+    assert InfinityPlan.from_json(p.to_json()) == p
+    rc = p.to_run_config(nvme_dir="/tmp/x")
+    assert rc.offload.param_quant == "q4"
+    assert "quant=q4" in p.summary()
+    assert "param_quant" in OVERRIDABLE
+
+
 def test_override_zero3_on_non_dense_family_raises():
     moe = configs.get("granite-moe-1b-a400m")
     with pytest.raises(ValueError, match="dense only"):

@@ -1,0 +1,266 @@
+"""Quantized tier transport (core/qformat.py): block round-trips within the
+per-block error bound (hypothesis property tests), wire payloads actually
+shrink by the advertised ratio, raw passthrough for non-float content, the
+numpy/jnp encoder mirrors agree, and ``QuantizedArrayStore`` holds rows
+transparently on the host and NVMe stores — including a flush-then-reopen
+with the ``__qformat__`` sidecar and the logical-vs-wire counter split."""
+import math
+
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core import qformat
+from repro.core.offload import HostArrayStore, NvmeStore, ParamStreamer
+from repro.testing import optional_hypothesis
+
+given, settings, st, HAVE_HYPOTHESIS = optional_hypothesis()
+
+
+def _rand(shape, seed=0, dtype=np.float32, scale=1.0):
+    return (np.random.default_rng(seed).standard_normal(shape)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# encode/decode cores: error bounds per block
+# ---------------------------------------------------------------------------
+
+
+def test_q8_roundtrip_error_bound():
+    x = _rand((4096,), seed=1, scale=3.0)
+    q, s = qformat.q8_encode_np(x)
+    got = qformat.q8_decode_np(q, s)[: x.size]
+    # per-element error bounded by one stored-scale unit (quantizer divides
+    # by the same fp16-rounded scale it ships)
+    bound = np.repeat(s.astype(np.float32), qformat.BLOCK)[: x.size]
+    assert np.all(np.abs(got - x) <= bound + 1e-6)
+
+
+def test_q4_roundtrip_error_bound():
+    x = _rand((4096,), seed=2, scale=3.0)
+    packed, s, m16 = qformat.q4_encode_np(x)
+    got = qformat.q4_decode_np(packed, s, m16)[: x.size]
+    # one scale unit + the fp16 rounding of the stored per-block min
+    bound = (np.repeat(s.astype(np.float32), qformat.BLOCK)
+             + np.repeat(np.abs(m16.astype(np.float32)), qformat.BLOCK)
+             * 2.0 ** -8)[: x.size]
+    assert np.all(np.abs(got - x) <= bound + 1e-5)
+
+
+def test_q4_constant_block_is_exact_at_fp16():
+    x = np.full((qformat.BLOCK * 3,), 0.7138671875, np.float32)  # exact fp16
+    packed, s, m16 = qformat.q4_encode_np(x)
+    assert np.all(s.astype(np.float32) == 0.0)
+    np.testing.assert_array_equal(
+        qformat.q4_decode_np(packed, s, m16)[: x.size], x)
+
+
+def test_q8_zero_block_decodes_to_zero():
+    x = np.zeros((qformat.BLOCK,), np.float32)
+    q, s = qformat.q8_encode_np(x)
+    np.testing.assert_array_equal(qformat.q8_decode_np(q, s), x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 300), seed=st.integers(0, 10_000),
+       scale=st.sampled_from([1e-3, 1.0, 50.0]))
+def test_q8_wire_roundtrip_property(n, seed, scale):
+    x = _rand((n,), seed=seed, dtype=ml_dtypes.bfloat16, scale=scale)
+    got = qformat.decode_array(qformat.encode_array(x, "q8"))
+    assert got.shape == x.shape and got.dtype == x.dtype
+    x32 = x.astype(np.float32)
+    absmax = np.abs(x32).max()
+    # 1/127 relative-to-blockmax quantization + fp16 scale rounding slack
+    assert np.abs(got.astype(np.float32) - x32).max() <= absmax / 100 + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 300), seed=st.integers(0, 10_000),
+       scale=st.sampled_from([1e-3, 1.0, 50.0]))
+def test_q4_wire_roundtrip_property(n, seed, scale):
+    x = _rand((n,), seed=seed, dtype=ml_dtypes.bfloat16, scale=scale)
+    got = qformat.decode_array(qformat.encode_array(x, "q4"))
+    assert got.shape == x.shape and got.dtype == x.dtype
+    x32 = x.astype(np.float32)
+    spread = (x32.max() - x32.min()) if n > 1 else 0.0
+    # 1/15 of the block spread + min-rounding slack
+    bound = spread / 10 + np.abs(x32).max() * 2.0 ** -8 + 1e-6
+    assert np.abs(got.astype(np.float32) - x32).max() <= bound
+
+
+# ---------------------------------------------------------------------------
+# wire payloads: size ratios, raw passthrough, self-description
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt,max_ratio", [("q8", 0.55), ("q4", 0.35)])
+def test_wire_bytes_shrink(fmt, max_ratio):
+    x = _rand((64, 512), seed=3, dtype=ml_dtypes.bfloat16)
+    wire = qformat.encode_array(x, fmt)
+    assert wire.nbytes <= max_ratio * x.nbytes
+    # the advertised compression ratio matches the real payload (header
+    # overhead stays under a couple percent on a real row)
+    assert wire.nbytes * qformat.compression_ratio(fmt) == pytest.approx(
+        x.nbytes, rel=0.02)
+
+
+@pytest.mark.parametrize("fmt", ["q8", "q4"])
+def test_raw_passthrough_for_non_float(fmt):
+    for arr in (np.arange(37, dtype=np.int32),
+                np.asarray(5, np.int64),
+                np.zeros((0,), np.float32)):
+        got = qformat.decode_array(qformat.encode_array(arr, fmt))
+        assert got.dtype == arr.dtype and got.shape == arr.shape
+        np.testing.assert_array_equal(got, arr)
+
+
+def test_multidim_and_dtype_restored():
+    x = _rand((3, 5, 7), seed=4, dtype=np.float32)
+    got = qformat.decode_array(qformat.encode_array(x, "q8"))
+    assert got.shape == (3, 5, 7) and got.dtype == np.float32
+
+
+def test_bad_magic_and_unknown_format_raise():
+    with pytest.raises(ValueError, match="magic"):
+        qformat.decode_array(np.zeros(16, np.uint8))
+    with pytest.raises(ValueError, match="unknown quant format"):
+        qformat.encode_array(np.ones(4, np.float32), "q2")
+    with pytest.raises(ValueError, match="unknown quant format"):
+        qformat.compression_ratio("q2")
+
+
+def test_compression_ratio_values():
+    assert qformat.compression_ratio("none") == 1.0
+    assert qformat.compression_ratio(None) == 1.0
+    assert qformat.compression_ratio("q8") == pytest.approx(2 / 1.0625)
+    assert qformat.compression_ratio("q4") == pytest.approx(2 / 0.625)
+    # fp32 payloads compress twice as hard as bf16
+    assert qformat.compression_ratio("q8", "float32") == pytest.approx(
+        2 * qformat.compression_ratio("q8"))
+
+
+# ---------------------------------------------------------------------------
+# numpy vs jnp mirrors (the fused-kernel operand path)
+# ---------------------------------------------------------------------------
+
+
+def test_jnp_quantize_matches_numpy_wire_operands():
+    x = _rand((16, 128), seed=5, dtype=ml_dtypes.bfloat16)
+    q_np, s_np, out_dtype = qformat.wire_matmul_operands(
+        qformat.encode_array(x, "q8"))
+    q_j, s_j = qformat.quantize_q8_jnp(x)
+    assert out_dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(q_j), q_np)
+    np.testing.assert_array_equal(np.asarray(s_j).view(np.uint16),
+                                  s_np.view(np.uint16))
+
+
+def test_dequantize_q8_jnp_restores_dtype():
+    import jax.numpy as jnp
+
+    x = _rand((8, 64), seed=6, dtype=ml_dtypes.bfloat16)
+    q, s = qformat.quantize_q8_jnp(x)
+    w = qformat.dequantize_q8_jnp(q, s, dtype=jnp.bfloat16)
+    assert w.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(w, np.float32),
+                               x.astype(np.float32), atol=0.05)
+
+
+def test_wire_matmul_operands_rejects_non_q8_and_ragged():
+    x = _rand((4, 64), seed=7, dtype=ml_dtypes.bfloat16)
+    with pytest.raises(ValueError, match="q8"):
+        qformat.wire_matmul_operands(qformat.encode_array(x, "q4"))
+    ragged = _rand((4, 33), seed=8, dtype=ml_dtypes.bfloat16)
+    with pytest.raises(ValueError, match="2-D"):
+        qformat.wire_matmul_operands(qformat.encode_array(ragged, "q8"))
+
+
+# ---------------------------------------------------------------------------
+# QuantizedArrayStore: transparent rows + the logical/wire counter split
+# ---------------------------------------------------------------------------
+
+
+def _store_case(tmp_path, kind):
+    if kind == "nvme":
+        return NvmeStore(str(tmp_path), pool_mb=4)
+    return HostArrayStore(pool_mb=4)
+
+
+@pytest.mark.parametrize("kind", ["host", "nvme"])
+def test_quantized_store_roundtrip_and_counters(tmp_path, kind):
+    store = qformat.maybe_wrap_store(_store_case(tmp_path, kind), "q8")
+    x = _rand((64, 96), seed=9, dtype=ml_dtypes.bfloat16)
+    m = store.mark()
+    store.write("w", x).result()
+    got = store.read("w").result()
+    assert got.dtype == x.dtype and got.shape == x.shape
+    np.testing.assert_allclose(got.astype(np.float32), x.astype(np.float32),
+                               atol=0.05)
+    d = store.delta_since(m)
+    # the wrapper counts decoded arrays; the wrapped store counts the wire
+    assert d["logical_bytes_read"] == x.nbytes
+    assert d["logical_bytes_written"] == x.nbytes
+    assert 0 < d["bytes_read"] < x.nbytes
+    assert 0 < d["bytes_written"] < x.nbytes
+    stats = store.bandwidth_stats()
+    assert stats["wire_format"] == "q8"
+    assert stats["logical_bytes_written"] >= x.nbytes
+    # the sidecar is bookkeeping, not a row
+    assert store.keys() == ["w"]
+    assert store.kind == ("nvme" if kind == "nvme" else "host")
+
+
+def test_plain_store_reports_logical_equals_wire(tmp_path):
+    store = NvmeStore(str(tmp_path), pool_mb=4)
+    m = store.mark()
+    a = _rand((100,), seed=10)
+    store.write("a", a).result()
+    store.read("a").result()
+    d = store.delta_since(m)
+    assert d["logical_bytes_read"] == d["bytes_read"] == a.nbytes
+    assert d["logical_bytes_written"] == d["bytes_written"] == a.nbytes
+
+
+def test_maybe_wrap_store_none_is_identity(tmp_path):
+    store = HostArrayStore(pool_mb=4)
+    assert qformat.maybe_wrap_store(store, "none") is store
+    assert qformat.maybe_wrap_store(store, None) is store
+    wrapped = qformat.maybe_wrap_store(store, "q4")
+    assert isinstance(wrapped, qformat.QuantizedArrayStore)
+    assert wrapped.ratio == qformat.compression_ratio("q4")
+
+
+def test_nvme_flush_then_reopen_with_sidecar(tmp_path):
+    x = _rand((32, 64), seed=11, dtype=ml_dtypes.bfloat16)
+    store = qformat.maybe_wrap_store(NvmeStore(str(tmp_path), pool_mb=4), "q8")
+    store.write("row", x).result()
+    store.flush()
+    store.close()
+    # same format reopens and decodes the persisted wire payload
+    again = qformat.maybe_wrap_store(NvmeStore(str(tmp_path), pool_mb=4), "q8")
+    got = again.read("row").result()
+    assert got.dtype == x.dtype
+    np.testing.assert_allclose(got.astype(np.float32), x.astype(np.float32),
+                               atol=0.05)
+    again.close()
+    # a mismatched format fails fast on the __qformat__ sidecar
+    with pytest.raises(ValueError, match="configured for"):
+        qformat.maybe_wrap_store(NvmeStore(str(tmp_path), pool_mb=4), "q4")
+
+
+def test_param_streamer_over_quantized_store(tmp_path):
+    """The executor's row path runs unmodified on the wrapper: seeded bf16
+    rows come back within quantization error, and the store only ever held
+    wire-sized payloads."""
+    inner = NvmeStore(str(tmp_path), pool_mb=4)
+    ps = ParamStreamer(qformat.maybe_wrap_store(inner, "q8"), read_ahead=2)
+    rows = _rand((4, 2048), seed=12, dtype=ml_dtypes.bfloat16)
+    ps.seed({"rank0": rows}, row_split=True)
+    got = ps.read_row("rank0", 2).result()
+    assert got.dtype == rows.dtype
+    np.testing.assert_allclose(got.astype(np.float32),
+                               rows[2].astype(np.float32), atol=0.05)
+    wire = inner.bandwidth_stats()["bytes_written"]
+    logical = rows.nbytes
+    assert wire < 0.6 * logical

@@ -95,6 +95,27 @@ def test_default_prefetch_layers_bandwidth_model():
     assert fast <= slow
 
 
+def test_default_prefetch_layers_compression_deepens_window():
+    """Quantized wire rows pin 1/ratio of the logical bytes, so the same
+    staging budget sustains a ratio-x deeper prefetch horizon — the window
+    multiplies by the compression ratio (clamped below full residency)."""
+    from repro.core import qformat
+
+    base = default_prefetch_layers(32, 1 << 22, batch_tokens=4096)
+    q8 = default_prefetch_layers(32, 1 << 22, batch_tokens=4096,
+                                 compression_ratio=qformat.compression_ratio("q8"))
+    q4 = default_prefetch_layers(32, 1 << 22, batch_tokens=4096,
+                                 compression_ratio=qformat.compression_ratio("q4"))
+    assert base < q8 <= q4 <= 31
+    assert q8 >= int(np.ceil(base * qformat.compression_ratio("q8"))) - 1
+    # ratios <= 1 never shrink the window below the bandwidth-derived one
+    assert default_prefetch_layers(32, 1 << 22, 4096,
+                                   compression_ratio=0.5) == base
+    # the clamp still holds on shallow models
+    assert default_prefetch_layers(2, 1 << 22, 8,
+                                   compression_ratio=3.2) == 1
+
+
 # ---------------------------------------------------------------------------
 # prefetch engine + working-set accounting
 # ---------------------------------------------------------------------------
