@@ -273,7 +273,8 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
                    param_tier: str = "device", grad_tier: str = "device",
                    prefetch_layers: int = 0, read_ahead: int = 2,
                    nvme_workers: int = 2, plan_mode: str = "manual",
-                   plan_args=None, param_quant: str = "none") -> None:
+                   plan_args=None, param_quant: str = "none",
+                   arch: str = "smollm-135m", expert_hot_mb: int = 0) -> None:
     import jax
     import jax.numpy as jnp
 
@@ -284,7 +285,7 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
     from repro.launch.mesh import make_local_mesh
 
     nvme_dir = tempfile.mkdtemp(prefix="repro_bench_exec")
-    cfg = configs.smoke("smollm-135m")
+    cfg = configs.smoke(arch)
     shape = ShapeConfig("bench", 128, 4, "train")
     # Every cell gets a plan artifact recording WHY this configuration was
     # chosen: --plan auto derives the config from it; manual cells attach a
@@ -308,7 +309,7 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
             "prefetch_layers": prefetch_layers, "read_ahead": read_ahead,
             "nvme_workers": nvme_workers, "remat": "full", "grad_accum": 1,
             "pinned_buffer_mb": 64, "act_tier": "device",
-            "param_quant": param_quant,
+            "param_quant": param_quant, "expert_hot_mb": expert_hot_mb,
         })
         run = RunConfig(model=cfg,
                         parallel=make_parallel(engine),
@@ -319,11 +320,14 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
                                              prefetch_layers=prefetch_layers,
                                              param_quant=param_quant,
                                              param_read_ahead=read_ahead,
-                                             nvme_workers=nvme_workers),
+                                             nvme_workers=nvme_workers,
+                                             expert_hot_mb=expert_hot_mb),
                         train=TrainConfig())
     eng_name = run.parallel.engine
     cell = (f"{eng_name}_p{run.offload.param_tier}_g{run.offload.grad_tier}"
             f"_o{run.offload.opt_tier}")
+    if cfg.family == "moe":
+        cell = f"{cfg.arch.replace('-', '_')}_{cell}"
     if run.offload.param_quant != "none":
         cell += f"_{run.offload.param_quant}"
     plan_path = os.path.join(os.path.dirname(__file__), "..", "experiments",
@@ -380,6 +384,24 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
             emit(f"executor/{cell}/prefetch_hit_rate", 0.0,
                  f"{m['prefetch_hit_rate']:.3f}")
             emit(f"executor/{cell}/evictions", 0.0, int(m["evictions"]))
+        # MoE expert paging: per-unit residency/overlap counters plus the
+        # routing health signals (drop fraction doubles as the popularity
+        # input for the hot-expert cache)
+        if "expert_peak_resident_bytes" in m:
+            emit(f"executor/{cell}/expert_peak_resident_bytes", 0.0,
+                 int(m["expert_peak_resident_bytes"]))
+            emit(f"executor/{cell}/expert_total_bytes", 0.0,
+                 int(m["expert_total_bytes"]))
+            emit(f"executor/{cell}/expert_prefetch_hit_rate", 0.0,
+                 f"{m['expert_prefetch_hit_rate']:.3f}")
+            emit(f"executor/{cell}/expert_evictions", 0.0,
+                 int(m["expert_evictions"]))
+        if "moe_dropped_token_fraction" in m:
+            emit(f"executor/{cell}/moe_dropped_token_fraction", 0.0,
+                 f"{float(m['moe_dropped_token_fraction']):.4f}")
+            load = np.asarray(m["moe_expert_load"]).ravel()
+            emit(f"executor/{cell}/moe_expert_load", 0.0,
+                 "|".join(f"{v:.3f}" for v in load))
         for k, v in ex.bandwidth_stats().items():
             emit(f"executor/{cell}/run_{k}", 0.0,
                  f"{v:.3f}" if isinstance(v, float) else v)
@@ -586,6 +608,12 @@ def main() -> None:
                     help="slow-tier param reads in flight beyond the window")
     ap.add_argument("--nvme-workers", type=int, default=2,
                     help="worker threads per slow-tier store")
+    ap.add_argument("--exec-arch", default="smollm-135m",
+                    help="model arch for the `executor` bench (a MoE arch "
+                         "pages expert rows as independent schedule units)")
+    ap.add_argument("--expert-hot-mb", type=int, default=0,
+                    help="hot-expert cache budget in MB for MoE runs "
+                         "(0 = auto: two waves of expert rows)")
     from repro import plan as plan_mod
 
     plan_mod.add_plan_args(ap)
@@ -599,7 +627,9 @@ def main() -> None:
                            args.prefetch_layers, args.read_ahead,
                            args.nvme_workers,
                            plan_mode=args.plan, plan_args=args,
-                           param_quant=args.param_quant)
+                           param_quant=args.param_quant,
+                           arch=args.exec_arch,
+                           expert_hot_mb=args.expert_hot_mb)
         else:
             BENCHES[k]()
 

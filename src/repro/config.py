@@ -159,6 +159,9 @@ class OffloadConfig:
     prefetch_layers: int = 0  # layered-epoch window; 0 = bandwidth-aware auto
     # (schedule.default_prefetch_layers from the paper's Sec. 3-4 model)
     nvme_workers: int = 2  # worker threads per slow-tier store
+    expert_hot_mb: int = 0  # MoE hot-expert cache budget (MiB) for the
+    # layered epoch's popularity cache; 0 = auto (the 2*top_k hottest expert
+    # rows — schedule.resolve_expert_hot_bytes)
 
     def __post_init__(self):
         c = "OffloadConfig"
@@ -172,6 +175,7 @@ class OffloadConfig:
         _require_min(c, "prefetch_layers", self.prefetch_layers, 0)
         _require_min(c, "nvme_workers", self.nvme_workers, 1)
         _require_min(c, "pinned_buffer_mb", self.pinned_buffer_mb, 1)
+        _require_min(c, "expert_hot_mb", self.expert_hot_mb, 0)
 
     @property
     def opt_offgraph(self) -> bool:

@@ -168,25 +168,39 @@ class ZeroInfinityEngine:
         param_host = run.offload.param_tier == "host" and self.host_ok
         param_shardings = self.param_shardings() if param_host else None
 
+        # families with routing/step statistics (moe) expose loss_stats: the
+        # grad pass threads the aux dict out so drop/load counters land in
+        # step metrics without a second forward
+        loss_f, has_aux = bundle.loss, False
+        if bundle.loss_stats is not None:
+            loss_f, has_aux = bundle.loss_stats, True
+
         def grads_of(params, batch):
             accum = pc.grad_accum
             if accum <= 1:
-                loss, grads = jax.value_and_grad(bundle.loss)(params, batch)
-                return loss, grads
+                loss, grads = jax.value_and_grad(loss_f, has_aux=has_aux)(params, batch)
+                if has_aux:
+                    loss, aux = loss
+                    return loss, grads, aux
+                return loss, grads, {}
             # microbatch over the leading batch dim
             micro = jax.tree.map(lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
                                  batch)
 
             def step(carry, mb):
                 loss_acc, g_acc = carry
-                loss, g = jax.value_and_grad(bundle.loss)(params, mb)
+                loss, g = jax.value_and_grad(loss_f, has_aux=has_aux)(params, mb)
+                aux = {}
+                if has_aux:
+                    loss, aux = loss
                 g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-                return (loss_acc + loss, g), ()
+                return (loss_acc + loss, g), aux
 
             zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (loss, grads), _ = jax.lax.scan(step, (jnp.zeros(()), zeros), micro)
+            (loss, grads), auxs = jax.lax.scan(step, (jnp.zeros(()), zeros), micro)
             inv = 1.0 / accum
-            return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+            aux = jax.tree.map(lambda a: jnp.mean(a, axis=0), auxs) if has_aux else {}
+            return loss * inv, jax.tree.map(lambda g: g * inv, grads), aux
 
         def train_step(state, batch):
             params, opt = state["params"], state.get("opt")  # no opt offgraph
@@ -199,13 +213,13 @@ class ZeroInfinityEngine:
                 opt = jax.tree.map(
                     lambda x, s: jax.device_put(x, s.with_memory_kind("device")),
                     opt, self._opt_state_from(self.opt_shardings()))
-            loss, grads = grads_of(params, batch)
+            loss, grads, aux = grads_of(params, batch)
             # ZeRO grad partitioning: force reduce-scatter placement
             grads = jax.tree.map(
                 lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, grad_shardings)
             if grads_only:
                 gnorm = _global_norm(grads)
-                return grads, {"loss": loss, "grad_norm": gnorm}
+                return grads, {"loss": loss, "grad_norm": gnorm, **aux}
             new_params, new_opt = adam.apply_updates(grads, opt, tc, params_prev=params)
             if param_host:  # updated bf16 params return to pinned host memory
                 new_params = jax.tree.map(
@@ -215,7 +229,7 @@ class ZeroInfinityEngine:
                     lambda x, s: jax.device_put(x, s), new_opt,
                     self._opt_state_from(self.opt_shardings()))
             metrics = {"loss": loss, "grad_norm": _global_norm(grads),
-                       "lr": adam.lr_at(tc, new_opt.step)}
+                       "lr": adam.lr_at(tc, new_opt.step), **aux}
             return {"params": new_params, "opt": new_opt}, metrics
 
         return train_step

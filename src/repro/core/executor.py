@@ -113,6 +113,8 @@ class InfinityExecutor:
         self.plan = plan
         self.engine = engine if engine is not None else make_engine(run, mesh)
         self.is_explicit = isinstance(self.engine, ExplicitZero3Engine)
+        # explicit-engine MoE: expert rows are independent schedule units
+        self.is_moe = bool(getattr(self.engine, "is_moe", False))
         off = run.offload
         self.offgraph = run.opt_offgraph
         self.param_nvme = off.param_tier == "nvme"
@@ -157,6 +159,14 @@ class InfinityExecutor:
         self._sched_tokens: Optional[int] = None
         self._layer_fns = None
         self._param_template = None  # struct tree for dropped carried leaves
+        self._eflat_template = None
+        # dynamic expert paging (MoE layered epoch): its own PrefetchEngine
+        # over ("x", layer, expert) units sharing the working-set manager,
+        # plus the hot-expert cache and the popularity predictor
+        self._pe_x: Optional[sched_mod.PrefetchEngine] = None
+        self._pe_x_stream: Optional[ParamStreamer] = None
+        self._hot: Optional[sched_mod.HotUnitCache] = None
+        self._pop: Optional[sched_mod.ExpertPopularity] = None
 
     # ------------------------------------------------------------------
     # state
@@ -200,6 +210,7 @@ class InfinityExecutor:
         to placeholder structs (peak resident param bytes stays O(window)
         between steps, not O(L))."""
         off = self.run.offload
+        erows = None
         if self.is_explicit and (self.offgraph or self.param_nvme):
             assert not isinstance(state["flat"], jax.ShapeDtypeStruct), (
                 "reseed needs materialized params; use materialized state "
@@ -208,6 +219,11 @@ class InfinityExecutor:
             # first so the rank partition matches the mesh.
             flat = jax.device_put(state["flat"],
                                   self.engine.state_shardings()["flat"])
+            if self.is_moe:
+                assert not isinstance(state["eflat"], jax.ShapeDtypeStruct)
+                eflat = jax.device_put(state["eflat"],
+                                       self.engine.state_shardings()["eflat"])
+                erows = self._rank_arrays(eflat)  # {rank: (L*E, Pe/dp)}
         if self.offgraph:
             # stores are reused across reseeds (restart/restore re-enters
             # here): their worker threads and cumulative counters persist,
@@ -218,12 +234,21 @@ class InfinityExecutor:
             if self.layered:
                 # per-layer per-rank key namespaces, inserted in backward
                 # (production) order so the streamed update consumes grads
-                # as the reversed pass emits them
+                # as the reversed pass emits them; MoE expert rows
+                # ("xrank<r>/l<layer*E+e>") precede their layer's dense row —
+                # the backward waves emit expert grads before the attn vjp
                 rows = self._rank_arrays(flat)
-                self.offload.init_from_params(
-                    {f"rank{r}/l{li}": rows[r][li].astype(np.float32)
-                     for li in range(rows[next(iter(rows))].shape[0] - 1, -1, -1)
-                     for r in sorted(rows)})
+                seed: Dict[str, np.ndarray] = {}
+                for li in range(rows[next(iter(rows))].shape[0] - 1, -1, -1):
+                    if erows is not None:
+                        E = self.engine.n_experts
+                        for e in range(E):
+                            for r in sorted(erows):
+                                seed[f"xrank{r}/l{li * E + e}"] = \
+                                    erows[r][li * E + e].astype(np.float32)
+                    for r in sorted(rows):
+                        seed[f"rank{r}/l{li}"] = rows[r][li].astype(np.float32)
+                self.offload.init_from_params(seed)
             elif self.is_explicit:
                 # seed per-rank key namespaces with the f32 view of each
                 # rank's (L, P/dp) bf16 shard (exact: bf16 -> f32 is
@@ -242,9 +267,11 @@ class InfinityExecutor:
             self.param_stream = ParamStreamer(self.param_store,
                                               read_ahead=off.param_read_ahead)
             if self.is_explicit:
-                self.param_stream.seed(
-                    {f"rank{r}": a for r, a in
-                     self._rank_arrays(flat).items()}, row_split=True)
+                named = {f"rank{r}": a for r, a in
+                         self._rank_arrays(flat).items()}
+                if erows is not None:
+                    named.update({f"xrank{r}": a for r, a in erows.items()})
+                self.param_stream.seed(named, row_split=True)
             else:
                 self.param_stream.seed(
                     {k: np.asarray(v) for k, v in
@@ -270,10 +297,20 @@ class InfinityExecutor:
                 self._param_template = self.engine.param_specs()
         return self._param_template
 
+    def _eflat_placeholder(self):
+        if self._eflat_template is None:
+            eng = self.engine
+            self._eflat_template = jax.ShapeDtypeStruct(
+                (eng.n_layers * eng.n_experts, eng.elayout.padded),
+                jnp.bfloat16, sharding=eng.state_shardings()["eflat"])
+        return self._eflat_template
+
     def _drop_param_leaves(self, state):
         state = dict(state)
         key = "flat" if self.is_explicit else "params"
         state[key] = self._param_placeholder()
+        if self.is_moe:
+            state["eflat"] = self._eflat_placeholder()
         return state
 
     @staticmethod
@@ -287,17 +324,40 @@ class InfinityExecutor:
         the denominator of the never-fully-resident claim."""
         if not self.param_nvme:
             return 0
-        tpl = self._param_placeholder()
+        tpl = [self._param_placeholder()]
+        if self.is_moe:
+            tpl.append(self._eflat_placeholder())
         return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
-                   for l in jax.tree.leaves(tpl))
+                   for t in tpl for l in jax.tree.leaves(t))
+
+    @property
+    def expert_total_bytes(self) -> int:
+        """Global bytes of all expert rows — the denominator of the
+        expert-paging claim (peak resident expert bytes << this)."""
+        if not (self.param_nvme and self.is_moe):
+            return 0
+        l = self._eflat_placeholder()
+        return int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+
+    def _materialize_rows(self):
+        """Assemble the full row sets from the param store — checkpoint path
+        only; the training step never calls this. Returns (flat, eflat|None).
+        """
+        loaded = self.param_stream.load_all()
+        flat = self._flat_from_ranks(
+            {int(k[len("rank"):]): v for k, v in loaded.items()
+             if k.startswith("rank")},
+            like=self._param_placeholder())
+        eflat = None
+        if self.is_moe:
+            eflat = self._flat_from_ranks(
+                {int(k[len("xrank"):]): v for k, v in loaded.items()
+                 if k.startswith("xrank")},
+                like=self._eflat_placeholder())
+        return flat, eflat
 
     def _materialize_flat(self):
-        """Assemble the full (L, P) flat from the param store — checkpoint
-        path only; the training step never calls this."""
-        loaded = self.param_stream.load_all()
-        return self._flat_from_ranks(
-            {int(k[len("rank"):]): v for k, v in loaded.items()},
-            like=self._param_placeholder())
+        return self._materialize_rows()[0]
 
     def _materialize_params(self, like_tree):
         """GSPMD engine: assemble the parameter pytree from the store."""
@@ -316,7 +376,9 @@ class InfinityExecutor:
             return state
         state = dict(state)
         if self.is_explicit and self._is_dropped(state["flat"]):
-            state["flat"] = self._materialize_flat()
+            state["flat"], eflat = self._materialize_rows()
+            if eflat is not None:
+                state["eflat"] = eflat
         elif not self.is_explicit and self._is_dropped(state["params"]):
             state["params"] = self._materialize_params(state["params"])
         return state
@@ -350,7 +412,10 @@ class InfinityExecutor:
         out (a full assembly, but only on the checkpoint path)."""
         state = self.checkpoint_state(state)
         if self.is_explicit:
-            return {k: state[k] for k in ("flat", "other", "other_opt", "step")}
+            keys = ("flat", "other", "other_opt", "step")
+            if self.is_moe:
+                keys += ("eflat",)
+            return {k: state[k] for k in keys}
         return {"params": state["params"]}
 
     def adopt_state(self, portable: dict, *, step: int = 0):
@@ -397,7 +462,8 @@ class InfinityExecutor:
         if self.layered:
             # scheduler-driven layered epoch: no monolithic jitted step at
             # all — per-layer fns iterate rows through the prefetch window
-            self._step_fn = self._layered_step()
+            self._step_fn = (self._layered_moe_step() if self.is_moe
+                             else self._layered_step())
             return self._step_fn
         with compat.set_mesh(self.mesh):
             jit_step = jax.jit(self.engine.make_train_step(grads_only=self.offgraph))
@@ -661,7 +727,10 @@ class InfinityExecutor:
                 nonlocal dx, sumsq
                 dx, g_row = fns["layer_vjp"](acts.pop(layer), rows[layer], dx)
                 sumsq = fns["accum_sumsq"](sumsq, g_row)
-                for r, g in self._rank_arrays(g_row).items():
+                # hand the store the *device* shards: the host pull runs on
+                # the store worker (or lazily at the opt step), so the next
+                # layer's vjp dispatches immediately
+                for r, g in self._rank_device(g_row).items():
                     key = f"rank{r}/l{layer}"
                     gdict[key] = (self.grad_store.roundtrip(f"{key}/g", g)
                                   if self.grad_offload else g)
@@ -694,6 +763,254 @@ class InfinityExecutor:
         return step
 
     # ------------------------------------------------------------------
+    # the MoE layered epoch: dynamic expert schedule units
+    # ------------------------------------------------------------------
+
+    def _ensure_expert_paging(self):
+        """Dynamic-unit machinery over ``("x", layer, expert)`` rows: a
+        second ``PrefetchEngine`` (class tag ``expert``) sharing the
+        working-set manager, the byte-budgeted hot-expert cache, and the
+        popularity EMA that predicts prefetches before the router runs.
+        Rebuilt when ``reseed`` swapped the underlying streamer."""
+        if self._pe_x is not None and self._pe_x_stream is self.param_stream:
+            return self._pe_x, self._hot, self._pop
+        if self._hot is not None:
+            self._hot.clear()
+        eng = self.engine
+        ranks = sorted(self._rank_of.values())
+        stream = self.param_stream
+        E = eng.n_experts
+
+        def fetch(unit):
+            _, l, e = unit
+            return [stream.read_row(f"xrank{r}", l * E + e) for r in ranks]
+
+        self._pe_x = sched_mod.PrefetchEngine(fetch, self._ws, cls="expert")
+        budget = sched_mod.resolve_expert_hot_bytes(
+            self.run.offload.expert_hot_mb, eng.top_k, eng.elayout.padded * 2)
+        self._hot = sched_mod.HotUnitCache(budget, self._pe_x)
+        self._pop = sched_mod.ExpertPopularity()
+        self._pe_x_stream = stream
+        return self._pe_x, self._hot, self._pop
+
+    @staticmethod
+    def _expert_waves(sel, W):
+        """Selected expert ids -> fixed-width waves (real_ids, padded ids
+        array, mask array). Fixed width keeps the wave fns at one jit
+        signature; padding repeats a real id with a zero mask (exactly zero
+        output/gradient, see models/moe.py)."""
+        waves = []
+        for i in range(0, len(sel), W):
+            wave = sel[i:i + W]
+            pad = W - len(wave)
+            ids = np.asarray(wave + [wave[-1]] * pad, np.int32)
+            mask = np.asarray([1.0] * len(wave) + [0.0] * pad, np.float32)
+            waves.append((wave, ids, mask))
+        return waves
+
+    def _layered_moe_step(self):
+        """One MoE train step where a layer expands into heterogeneous
+        schedule units: its dense row (ln1+attn+ln2) follows the static
+        layer plan, while its expert rows page dynamically — the router's
+        counts (one small host sync per layer) pick the selected set, which
+        streams through fixed-width waves of ``top_k`` rows; evict-bound
+        rows are offered to the hot-expert cache and predicted-hot rows
+        prefetch alongside the static plan's horizon. Peak expert residency
+        is O(wave + hot budget), never O(E)."""
+        eng = self.engine
+        tc = self.run.train
+        E = eng.n_experts
+        W = max(1, eng.top_k)
+        L = eng.n_layers
+
+        def step(state, batch):
+            marks = {name: s.mark() for name, s in self._active_stores()}
+            if self._layer_fns is None:
+                self._layer_fns = eng.make_layer_fns()
+            fns = self._layer_fns
+            sched, pe = self._ensure_row_scheduler(batch)
+            pe_x, hot, pop = self._ensure_expert_paging()
+            self._ws.begin_step()
+            row_sh = eng.layer_row_sharding()
+            ranks = sorted(self._rank_of.values())
+            rows: Dict[int, jax.Array] = {}
+            router = state["other"]["router"]
+            sel_by_layer: Dict[int, list] = {}
+            drop_fracs, loads = [], []
+
+            def run_pass(events, use_fn, predict_fn):
+                # piggyback predicted expert prefetches on the static plan's
+                # horizon: when layer l's dense row enters the window, the
+                # predicted-hot (forward) or known-selected (backward) expert
+                # rows start reading too
+                def on_prefetch(l):
+                    for e in predict_fn(l):
+                        u = ("x", l, e)
+                        if u not in hot:
+                            pe_x.prefetch(u)
+
+                pe.run_events(
+                    events,
+                    on_materialize=lambda l, vals: rows.__setitem__(
+                        l, self._device_row(vals, row_sh)),
+                    on_use=use_fn,
+                    on_evict=lambda l: rows.pop(l, None),
+                    on_prefetch=on_prefetch)
+
+            def wave_rows(l, wave):
+                """Materialize one wave's device rows (hot hits are free)."""
+                fresh, rws = [], []
+                for e in wave:
+                    u = ("x", l, e)
+                    payload = hot.get(u)
+                    if payload is None:
+                        payload = self._device_row(pe_x.materialize(u), row_sh)
+                        fresh.append((u, payload))
+                    rws.append(payload)
+                while len(rws) < W:
+                    rws.append(rws[-1])
+                return jnp.stack(rws), fresh
+
+            def retire(l, fresh):
+                for u, payload in fresh:
+                    if not hot.offer(u, payload,
+                                     nbytes=eng.elayout.padded * 2,
+                                     popularity=pop.score(l, u[2])):
+                        pe_x.evict(u)  # idempotent if offer already dropped
+
+            def start_reads(l, sel):
+                for e in sel:
+                    u = ("x", l, e)
+                    if u not in hot:
+                        pe_x.prefetch(u)
+
+            # ---- forward ----
+            x = fns["embed_fwd"](state["other"], batch["tokens"])
+            acts: Dict[int, jax.Array] = {}
+
+            def fwd_use(l):
+                nonlocal x
+                acts[l] = x
+                x_mid, counts_e, dropped, routed = fns["moe_attn"](
+                    x, rows[l], router[l])
+                # the one per-layer host sync: wave dispatch needs the routed
+                # set (the units only the router knows)
+                counts = np.asarray(counts_e)
+                sel = [int(e) for e in np.nonzero(counts > 0)[0]]
+                sel_by_layer[l] = sel
+                routed_f = max(float(routed), 1.0)
+                drop_fracs.append(float(dropped) / routed_f)
+                load = counts / routed_f
+                loads.append(load)
+                pop.update(l, load)
+                start_reads(l, sel)
+                out = x_mid
+                for wave, ids, mask in self._expert_waves(sel, W):
+                    erows, fresh = wave_rows(l, wave)
+                    out = out + fns["moe_wave_fwd"](
+                        x_mid, rows[l], router[l], erows, ids, mask)
+                    retire(l, fresh)
+                x = out
+
+            run_pass(sched.forward(), fwd_use, lambda l: pop.top(l, W))
+
+            # ---- head + reversed pass ----
+            loss, dx, g_head = fns["head"](x, state["other"], batch["labels"])
+            gdict: Dict[str, object] = {}
+            g_router = [None] * L
+            sumsq = jnp.zeros((), jnp.float32)
+
+            def drain(key, g):
+                gdict[key] = (self.grad_store.roundtrip(f"{key}/g", g)
+                              if self.grad_offload else g)
+
+            def bwd_use(l):
+                nonlocal dx, sumsq
+                x_in = acts.pop(l)
+                x_mid = fns["moe_xmid"](x_in, rows[l])
+                sel = sel_by_layer[l]
+                start_reads(l, sel)
+                dxmid = dx
+                g_row = None
+                g_rt = None
+                for wave, ids, mask in self._expert_waves(sel, W):
+                    erows, fresh = wave_rows(l, wave)
+                    dxm, g_row_w, g_rt_w, g_er = fns["moe_wave_vjp"](
+                        x_mid, rows[l], router[l], erows, ids, mask, dx)
+                    dxmid = dxmid + dxm
+                    g_row = g_row_w if g_row is None else g_row + g_row_w
+                    g_rt = g_rt_w if g_rt is None else g_rt + g_rt_w
+                    sumsq = fns["accum_sumsq2"](sumsq, g_er)
+                    shards = self._rank_device(g_er)
+                    for i, e in enumerate(wave):
+                        for r in ranks:
+                            drain(f"xrank{r}/l{l * E + e}", shards[r][i])
+                    retire(l, fresh)
+                dx_new, g_row_attn = fns["moe_attn_vjp"](x_in, rows[l], dxmid)
+                g_row = g_row_attn if g_row is None else g_row + g_row_attn
+                g_router[l] = g_rt
+                sumsq = fns["accum_sumsq"](sumsq, g_row)
+                dx = dx_new
+                for r, g in self._rank_device(g_row).items():
+                    drain(f"rank{r}/l{l}", g)
+
+            run_pass(sched.backward(), bwd_use,
+                     lambda l: sel_by_layer.get(l, []))
+
+            # unrouted experts update from known-zero grads fed directly to
+            # the streamed Adam (their m/v decay exactly as the all-resident
+            # baseline's) — no slow-tier grad traffic scales with E
+            zero_row = np.zeros(eng.elayout.padded // max(len(ranks), 1),
+                                np.float32)
+            for l in range(L):
+                selset = set(sel_by_layer[l])
+                for e in range(E):
+                    if e not in selset:
+                        for r in ranks:
+                            gdict[f"xrank{r}/l{l * E + e}"] = zero_row
+
+            g_emb = fns["embed_vjp"](state["other"], batch["tokens"], dx)
+            zeros_rt = jnp.zeros_like(router[0])
+            g_head = dict(g_head)
+            g_head["router"] = g_head["router"] + jnp.stack(
+                [g if g is not None else zeros_rt for g in g_router])
+            new_other, new_other_opt, new_step, fm = fns["finish"](
+                state["other"], state["other_opt"], state["step"],
+                g_head, g_emb, sumsq)
+
+            new_master = self.offload.step(
+                gdict, lr=float(fm["lr"]), beta1=tc.beta1, beta2=tc.beta2,
+                eps=tc.eps, weight_decay=tc.weight_decay)
+            for key, m32 in new_master.items():
+                rank, layer = key.split("/")  # "[x]rank<r>/l<i>"
+                self.param_stream.write_row(
+                    rank, int(layer[1:]), m32.astype(ml_dtypes.bfloat16))
+            # refresh hot-cached rows from the just-written masters so next
+            # step's hot hits serve the updated parameters (host->device put
+            # only — the saved traffic is the slow-tier read)
+            for u in hot.units():
+                _, l, e = u
+                vals = [new_master[f"xrank{r}/l{l * E + e}"].astype(
+                    ml_dtypes.bfloat16) for r in ranks]
+                hot.replace(u, self._device_row(vals, row_sh))
+            self.param_stream.flush()
+            if self.grad_store is not None:
+                self.grad_store.flush()
+
+            new_state = {"flat": self._param_placeholder(),
+                         "eflat": self._eflat_placeholder(),
+                         "other": new_other, "other_opt": new_other_opt,
+                         "step": new_step}
+            metrics = {"loss": loss, "grad_norm": fm["grad_norm"],
+                       "lr": fm["lr"],
+                       "moe_dropped_token_fraction": float(np.mean(drop_fracs)),
+                       "moe_expert_load": np.mean(np.stack(loads), axis=0),
+                       "expert_total_bytes": self.expert_total_bytes}
+            return new_state, self._with_tier_metrics(metrics, marks)
+
+        return step
+
+    # ------------------------------------------------------------------
     # rank-shard plumbing (explicit engine)
     # ------------------------------------------------------------------
 
@@ -701,6 +1018,15 @@ class InfinityExecutor:
         """Global (L, P) array -> {rank: local (L, P/dp) ndarray} (own dtype)."""
         return {self._rank_of[s.device]: np.asarray(s.data)
                 for s in arr.addressable_shards}
+
+    def _rank_device(self, arr) -> Dict[int, jax.Array]:
+        """Global array -> {rank: local shard as a *device* array} — no host
+        sync on the caller. The device->host copy happens on the consuming
+        store's worker thread (``ArrayStore.write``/``roundtrip`` convert
+        inside the submitted closure) or lazily when the streamed Adam
+        resolves the leaf — so issuing a layer's gradient drain never blocks
+        dispatch of the next layer's vjp."""
+        return {self._rank_of[s.device]: s.data for s in arr.addressable_shards}
 
     def _rank_shards(self, arr) -> Dict[str, np.ndarray]:
         """Global (L, P) array -> {'rank<r>/flat': f32 local (L, P/dp)}."""

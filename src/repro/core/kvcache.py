@@ -198,12 +198,12 @@ class PagedKVCache:
         self._layout[seq_id] = (treedef, int(length), entries, nbytes)
         return nbytes
 
-    def fetch(self, seq_id: str, cache_len: int):
-        """Windowed read-back; returns ``(cache_pytree, length)`` with seq
-        leaves zero-padded to ``cache_len`` capacity (numpy arrays — the
-        caller device-puts them by inserting into a decode slot)."""
-        import jax
-
+    def start_fetch(self, seq_id: str, cache_len: int) -> "KVFetchHandle":
+        """Begin a windowed read-back WITHOUT blocking: the first
+        ``prefetch_blocks`` reads are in flight when this returns, so an
+        admission issued while the current decode step runs pays only the
+        uncovered remainder at ``result()`` time (the admission-stall the
+        serve driver reports separately)."""
         treedef, length, entries, _ = self._layout[seq_id]
         self.store.flush()  # a fetch racing its own park must see the blocks
         work = []
@@ -212,31 +212,13 @@ class PagedKVCache:
                 work.extend((ps, f"{seq_id}/{ps}/b{i}") for i in range(nb))
             else:
                 work.append((ps, f"{seq_id}/{ps}/full"))
-        parts: Dict[str, List[np.ndarray]] = collections.defaultdict(list)
-        inflight: collections.deque = collections.deque()
-        wi = 0
-        while wi < len(work) or inflight:
-            while wi < len(work) and len(inflight) < self.prefetch_blocks:
-                ps, key = work[wi]
-                inflight.append((ps, self.store.read(key)))
-                wi += 1
-            ps, fut = inflight.popleft()
-            parts[ps].append(fut.result())
-        leaves = []
-        for ps, nb, shape in entries:
-            if nb:
-                arr = np.concatenate(parts[ps], axis=SEQ_AXIS)
-                pad = int(cache_len) - arr.shape[SEQ_AXIS]
-                if pad > 0:
-                    widths = [(0, 0)] * arr.ndim
-                    widths[SEQ_AXIS] = (0, pad)
-                    arr = np.pad(arr, widths)
-                elif pad < 0:
-                    arr = arr[:, :, :int(cache_len)]
-            else:
-                arr = parts[ps][0].reshape(shape)
-            leaves.append(arr)
-        return jax.tree_util.tree_unflatten(treedef, leaves), length
+        return KVFetchHandle(self, treedef, length, entries, work, cache_len)
+
+    def fetch(self, seq_id: str, cache_len: int):
+        """Blocking read-back; returns ``(cache_pytree, length)`` with seq
+        leaves zero-padded to ``cache_len`` capacity (numpy arrays — the
+        caller device-puts them by inserting into a decode slot)."""
+        return self.start_fetch(seq_id, cache_len).result()
 
     def drop(self, seq_id: str) -> None:
         """Forget a sequence and delete its blocks from the slow tier."""
@@ -267,6 +249,76 @@ class PagedKVCache:
 
     def delta_since(self, mark: dict) -> dict:
         return self.store.delta_since(mark)
+
+
+class KVFetchHandle:
+    """One parked sequence's in-flight fetch (see ``start_fetch``).
+
+    Reads stream through the store's worker threads with at most
+    ``prefetch_blocks`` in flight; ``poll()`` harvests completions and
+    refills the window without blocking, ``done()`` says whether the whole
+    sequence has landed, ``result()`` blocks for the remainder and
+    assembles the cache pytree."""
+
+    def __init__(self, cache: "PagedKVCache", treedef, length: int,
+                 entries, work, cache_len: int):
+        self._kv = cache
+        self._treedef = treedef
+        self.length = int(length)
+        self._entries = entries
+        self._work = work
+        self._cache_len = int(cache_len)
+        self._parts: Dict[str, List[np.ndarray]] = collections.defaultdict(list)
+        self._inflight: collections.deque = collections.deque()
+        self._wi = 0
+        self._out = None
+        self._issue()
+
+    def _issue(self) -> None:
+        while (self._wi < len(self._work)
+               and len(self._inflight) < self._kv.prefetch_blocks):
+            ps, key = self._work[self._wi]
+            self._inflight.append((ps, self._kv.store.read(key)))
+            self._wi += 1
+
+    def poll(self) -> None:
+        """Harvest completed reads and keep the window full — never blocks."""
+        while self._inflight and self._inflight[0][1].done():
+            ps, fut = self._inflight.popleft()
+            self._parts[ps].append(fut.result())
+            self._issue()
+
+    def done(self) -> bool:
+        self.poll()
+        return self._wi >= len(self._work) and not self._inflight
+
+    def result(self):
+        """Block for the uncovered remainder; returns ``(cache, length)``."""
+        import jax
+
+        if self._out is not None:
+            return self._out
+        while self._inflight:
+            ps, fut = self._inflight.popleft()
+            self._parts[ps].append(fut.result())
+            self._issue()
+        leaves = []
+        for ps, nb, shape in self._entries:
+            if nb:
+                arr = np.concatenate(self._parts[ps], axis=SEQ_AXIS)
+                pad = self._cache_len - arr.shape[SEQ_AXIS]
+                if pad > 0:
+                    widths = [(0, 0)] * arr.ndim
+                    widths[SEQ_AXIS] = (0, pad)
+                    arr = np.pad(arr, widths)
+                elif pad < 0:
+                    arr = arr[:, :, :self._cache_len]
+            else:
+                arr = self._parts[ps][0].reshape(shape)
+            leaves.append(arr)
+        self._out = (jax.tree_util.tree_unflatten(self._treedef, leaves),
+                     self.length)
+        return self._out
 
 
 # ---------------------------------------------------------------------------

@@ -209,11 +209,19 @@ class ArrayStore:
     # -- async API ----------------------------------------------------------
 
     def write(self, key: str, arr: np.ndarray) -> Future:
+        """Async write. ``arr`` may be any ``__array__``-convertible object —
+        including a device array: the device→host conversion runs on the
+        worker thread, not the caller (the overlap-centric drain; converting
+        at submit time would stall the dispatching thread on the transfer)."""
         if not self.overlap:
             f: Future = Future()
             f.set_result(self._write_sync(key, np.asarray(arr)))
             return f
-        fut = self._pool_exec.submit(self._write_sync, key, np.asarray(arr))
+
+        def _wr():
+            self._write_sync(key, np.asarray(arr))
+
+        fut = self._pool_exec.submit(_wr)
         self._pending.append(fut)
         return fut
 
@@ -228,16 +236,18 @@ class ArrayStore:
         """Drain ``arr`` into the store and resolve to the store-resident
         copy: an ordered write-then-read on one worker, so the caller can
         hold the future and let later drains overlap earlier consumers
-        (the grad-tier leg of the overlap-centric schedule)."""
-        arr = np.asarray(arr)
+        (the grad-tier leg of the overlap-centric schedule). As with
+        ``write``, ``arr`` may be a device array: the device→host pull
+        happens on the worker, so the caller dispatches the next layer's
+        compute immediately instead of serializing on the transfer."""
         if not self.overlap:
             f: Future = Future()
-            self._write_sync(key, arr)
+            self._write_sync(key, np.asarray(arr))
             f.set_result(self._read_sync(key))
             return f
 
         def _rt():
-            self._write_sync(key, arr)
+            self._write_sync(key, np.asarray(arr))
             return self._read_sync(key)
 
         fut = self._pool_exec.submit(_rt)

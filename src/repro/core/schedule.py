@@ -1,29 +1,42 @@
-"""Overlap-centric layer scheduler (paper Sec. 6): the subsystem that owns a
-step's layer-granular parameter movement.
+"""Overlap-centric schedule-unit scheduler (paper Sec. 6): the subsystem that
+owns a step's unit-granular parameter movement.
 
 ZeRO-Infinity's headline claim — training models larger than aggregate device
 memory — rests on never materializing the whole parameter set at once:
 parameters live in the slow tiers (host DRAM / NVMe) and are streamed through
-a bounded window of layers, prefetched ahead of use and evicted immediately
-after, so the device-resident working set is ``O(window)``, not ``O(L)``.
-This module is that scheduler, split into three pieces so each is testable
-in isolation:
+a bounded window of **schedule units**, prefetched ahead of use and evicted
+immediately after, so the device-resident working set is ``O(window)``, not
+``O(model)``. A unit is an opaque hashable key naming one independently
+movable parameter row: a dense transformer layer's row (the historical case,
+keyed by layer index), one expert's weight slice of an MoE layer (keyed
+``("x", layer, expert)`` by the executor), or a recurrent-state block. This
+module is that scheduler, split into pieces so each is testable in isolation:
 
   * ``LayerSchedule`` — the *pure plan*: an ordered event stream
     (``prefetch`` / ``materialize`` / ``use`` / ``evict``) for one pass over
-    the layers (forward order, reversed for backward — the paper's
+    a sequence of units (forward order, reversed for backward — the paper's
     "parameters are loaded one additional time" with recompute). Invariants
-    (property-tested in tests/test_schedule.py): every layer is materialized
-    and used exactly once per pass, residency never exceeds the window, and
-    eviction order matches use order.
+    (property-tested in tests/test_schedule.py, including heterogeneous unit
+    keys and sizes): every unit is materialized and used exactly once per
+    pass, residency never exceeds the window, and eviction order matches use
+    order.
   * ``WorkingSetManager`` — residency accounting: peak resident bytes of
     scheduler-managed parameters per step, prefetch hit rate (how often a
     row was already in flight when its turn came), and eviction counts —
     surfaced as the ``peak_resident_param_bytes`` / ``prefetch_hit_rate`` /
-    ``evictions`` step metrics.
+    ``evictions`` step metrics. Units may carry a class tag (``cls``), which
+    adds per-class metrics (e.g. ``expert_peak_resident_bytes``).
   * ``PrefetchEngine`` — the I/O driver: issues asynchronous slow-tier reads
-    (through ``ParamStreamer``'s per-layer row API, its backend) ahead of
-    use and resolves them at materialization.
+    (through ``ParamStreamer``'s per-row API, its backend) ahead of use and
+    resolves them at materialization. Units whose schedule is only known at
+    run time (router-selected expert rows) are driven directly through
+    ``prefetch`` / ``materialize`` / ``touch`` / ``evict`` rather than a
+    static plan.
+  * ``HotUnitCache`` + ``ExpertPopularity`` — the dynamic-unit policy layer:
+    a byte-budgeted LRU/popularity cache that keeps hot units (frequently
+    routed experts) resident across steps, and the per-unit popularity EMA
+    (fed by MoE routing counts) that predicts which units to prefetch before
+    the router has run.
 
 ``default_prefetch_layers`` derives the window from the paper's Sec. 3–4
 memory/bandwidth model (``core/model_math.py``): the smallest window whose
@@ -92,20 +105,31 @@ def default_kv_prefetch_blocks(block_bytes: float, step_flops: float, *,
 
 @dataclasses.dataclass(frozen=True)
 class Event:
-    """One scheduler action. ``op`` ∈ {prefetch, materialize, use, evict}."""
+    """One scheduler action on one unit.
+    ``op`` ∈ {prefetch, materialize, use, evict}; ``unit`` is any hashable
+    schedule-unit key (a bare layer index for dense rows)."""
 
     op: str
-    layer: int
+    unit: object
+
+    @property
+    def layer(self):
+        """Back-compat alias from when units could only be layer indices."""
+        return self.unit
 
 
 class LayerSchedule:
-    """The pure movement plan for one pass over ``num_layers`` layers.
+    """The pure movement plan for one pass over a sequence of units.
 
-    ``window`` bounds how many layers may be materialized (resident) at
-    once; ``read_ahead`` adds extra reads in flight beyond the materialized
-    window (the ``--read-ahead`` knob — backpressured by the shared pinned
-    pool). The plan is deterministic and engine-agnostic: executing it with
-    any ``PrefetchEngine`` yields the overlap-centric schedule.
+    ``num_layers`` names the default unit sequence ``0..num_layers-1`` (one
+    dense row per layer); ``pass_events`` accepts any ordered sequence of
+    hashable unit keys, so heterogeneous units (expert rows, state blocks)
+    schedule through the same plan. ``window`` bounds how many units may be
+    materialized (resident) at once; ``read_ahead`` adds extra reads in
+    flight beyond the materialized window (the ``--read-ahead`` knob —
+    backpressured by the shared pinned pool). The plan is deterministic and
+    engine-agnostic: executing it with any ``PrefetchEngine`` yields the
+    overlap-centric schedule.
     """
 
     def __init__(self, num_layers: int, window: int, read_ahead: int = 1):
@@ -114,7 +138,7 @@ class LayerSchedule:
         self.window = min(window, num_layers)
         self.read_ahead = read_ahead
 
-    def pass_events(self, order: Optional[Sequence[int]] = None) -> List[Event]:
+    def pass_events(self, order: Optional[Sequence] = None) -> List[Event]:
         order = list(order) if order is not None else list(range(self.num_layers))
         n = len(order)
         # reads issued this far ahead of use: the window-1 rows materialized
@@ -154,6 +178,7 @@ class WorkingSetManager:
 
     def __init__(self):
         self.current_bytes = 0
+        self._cls_current: Dict[str, int] = {}
         self.begin_step()
 
     def begin_step(self) -> None:
@@ -161,26 +186,55 @@ class WorkingSetManager:
         self.evictions = 0
         self.hits = 0
         self.misses = 0
+        # per-class views (units resident across steps — a hot cache — carry
+        # their bytes into the new step's baseline, same as the aggregate)
+        self._cls_peak = dict(self._cls_current)
+        self._cls_hits: Dict[str, int] = {}
+        self._cls_misses: Dict[str, int] = {}
+        self._cls_evictions: Dict[str, int] = {}
 
-    def on_materialize(self, nbytes: int, hit: bool) -> None:
+    def on_materialize(self, nbytes: int, hit: bool, cls: Optional[str] = None) -> None:
         self.current_bytes += nbytes
         self.peak_bytes = max(self.peak_bytes, self.current_bytes)
         if hit:
             self.hits += 1
         else:
             self.misses += 1
+        if cls is not None:
+            cur = self._cls_current.get(cls, 0) + nbytes
+            self._cls_current[cls] = cur
+            self._cls_peak[cls] = max(self._cls_peak.get(cls, 0), cur)
+            bucket = self._cls_hits if hit else self._cls_misses
+            bucket[cls] = bucket.get(cls, 0) + 1
 
-    def on_evict(self, nbytes: int) -> None:
+    def on_hit(self, cls: Optional[str] = None) -> None:
+        """A use served by an already-resident unit (hot-cache hit): counts
+        toward the hit rate without changing resident bytes."""
+        self.hits += 1
+        if cls is not None:
+            self._cls_hits[cls] = self._cls_hits.get(cls, 0) + 1
+
+    def on_evict(self, nbytes: int, cls: Optional[str] = None) -> None:
         self.current_bytes -= nbytes
         self.evictions += 1
+        if cls is not None:
+            self._cls_current[cls] = self._cls_current.get(cls, 0) - nbytes
+            self._cls_evictions[cls] = self._cls_evictions.get(cls, 0) + 1
 
     def stats(self) -> Dict[str, float]:
         total = self.hits + self.misses
-        return {
+        out = {
             "peak_resident_param_bytes": self.peak_bytes,
             "prefetch_hit_rate": self.hits / total if total else 0.0,
             "evictions": self.evictions,
         }
+        for cls in sorted(self._cls_peak):
+            n = self._cls_hits.get(cls, 0) + self._cls_misses.get(cls, 0)
+            out[f"{cls}_peak_resident_bytes"] = self._cls_peak[cls]
+            out[f"{cls}_prefetch_hit_rate"] = (self._cls_hits.get(cls, 0) / n
+                                               if n else 0.0)
+            out[f"{cls}_evictions"] = self._cls_evictions.get(cls, 0)
+        return out
 
 
 class PrefetchEngine:
@@ -195,15 +249,25 @@ class PrefetchEngine:
     counts as a miss) — and records the bytes as resident until ``evict``.
     """
 
-    def __init__(self, fetch: Callable[[int], list], ws: WorkingSetManager):
+    def __init__(self, fetch: Callable[[object], list], ws: WorkingSetManager,
+                 cls: Optional[str] = None):
         self._fetch = fetch
         self.ws = ws
-        self._inflight: Dict[int, list] = {}
-        self._resident: Dict[int, int] = {}  # unit -> materialized nbytes
+        self.cls = cls  # unit class tag for per-class working-set metrics
+        self._inflight: Dict[object, list] = {}
+        self._resident: Dict[object, int] = {}  # unit -> materialized nbytes
 
     def prefetch(self, unit) -> None:
         if unit not in self._inflight and unit not in self._resident:
             self._inflight[unit] = self._fetch(unit)
+
+    def touch(self, unit) -> bool:
+        """Use of an already-resident unit (served by a hot cache): records a
+        hit and returns True; returns False if the unit is not resident."""
+        if unit not in self._resident:
+            return False
+        self.ws.on_hit(self.cls)
+        return True
 
     def materialize(self, unit) -> list:
         futs = self._inflight.pop(unit, None)
@@ -213,32 +277,150 @@ class PrefetchEngine:
         vals = [f.result() for f in futs]
         nbytes = sum(int(v.nbytes) for v in vals)
         self._resident[unit] = nbytes
-        self.ws.on_materialize(nbytes, hit)
+        self.ws.on_materialize(nbytes, hit, self.cls)
         return vals
 
     def evict(self, unit) -> None:
         nbytes = self._resident.pop(unit, None)
         if nbytes is not None:
-            self.ws.on_evict(nbytes)
+            self.ws.on_evict(nbytes, self.cls)
 
-    def run_events(self, events, *, on_materialize, on_use, on_evict=None) -> None:
+    def run_events(self, events, *, on_materialize, on_use, on_evict=None,
+                   on_prefetch=None) -> None:
         """The single interpreter of a ``LayerSchedule`` plan: I/O ops are
         handled here, ``on_materialize(unit, vals)`` receives each unit's
-        fetched payloads, ``on_use(unit)`` runs the consumer's compute, and
+        fetched payloads, ``on_use(unit)`` runs the consumer's compute,
         ``on_evict(unit)`` (optional) drops consumer-side residents before
-        the accounting eviction."""
+        the accounting eviction, and ``on_prefetch(unit)`` (optional) lets
+        the consumer piggyback dynamic-unit prefetches (predicted expert
+        rows) on the static plan's horizon."""
         for ev in events:
             if ev.op == "prefetch":
-                self.prefetch(ev.layer)
+                self.prefetch(ev.unit)
+                if on_prefetch is not None:
+                    on_prefetch(ev.unit)
             elif ev.op == "materialize":
-                on_materialize(ev.layer, self.materialize(ev.layer))
+                on_materialize(ev.unit, self.materialize(ev.unit))
             elif ev.op == "use":
-                on_use(ev.layer)
+                on_use(ev.unit)
             else:
                 if on_evict is not None:
-                    on_evict(ev.layer)
-                self.evict(ev.layer)
+                    on_evict(ev.unit)
+                self.evict(ev.unit)
 
     @property
     def resident_units(self) -> Iterable:
         return self._resident.keys()
+
+
+class ExpertPopularity:
+    """Per-unit popularity EMA, fed by MoE routing counts.
+
+    The router decides a layer's expert set only mid-layer, too late to hide
+    the slow-tier fetch — so the executor prefetches the *predicted* top
+    units when the layer enters the schedule horizon, and this EMA is the
+    predictor. ``update(layer, load)`` folds one step's per-expert routed
+    fraction in; ``top(layer, n)`` returns the n hottest expert ids.
+    """
+
+    def __init__(self, decay: float = 0.8):
+        self.decay = decay
+        self._ema: Dict[object, Dict[int, float]] = {}
+
+    def update(self, layer, load: Sequence[float]) -> None:
+        ema = self._ema.setdefault(layer, {})
+        for e, v in enumerate(load):
+            ema[e] = self.decay * ema.get(e, 0.0) + (1.0 - self.decay) * float(v)
+
+    def score(self, layer, expert: int) -> float:
+        return self._ema.get(layer, {}).get(expert, 0.0)
+
+    def top(self, layer, n: int) -> List[int]:
+        ema = self._ema.get(layer)
+        if not ema:
+            return []
+        return sorted(ema, key=lambda e: (-ema[e], e))[:n]
+
+
+class HotUnitCache:
+    """Byte-budgeted LRU/popularity cache of materialized units.
+
+    Units offered at evict time stay resident (their bytes remain in the
+    ``WorkingSetManager``) until the budget forces the coldest out; a
+    ``get`` hit returns the cached payload with no slow-tier traffic and
+    counts as a prefetch hit. Victim choice is popularity-first (the EMA
+    score at offer time) with LRU recency as the tie-breaker. Hot experts
+    persist across steps — the same cache serves decode.
+    """
+
+    def __init__(self, budget_bytes: int, engine: PrefetchEngine):
+        self.budget = int(budget_bytes)
+        self.engine = engine
+        self._payload: Dict[object, object] = {}
+        self._nbytes: Dict[object, int] = {}
+        self._score: Dict[object, tuple] = {}  # (popularity, recency tick)
+        self._tick = 0
+        self.bytes = 0
+
+    def __contains__(self, unit) -> bool:
+        return unit in self._payload
+
+    def get(self, unit):
+        """Cached payload for a resident unit (None on miss); records a hit."""
+        if unit not in self._payload:
+            return None
+        self._tick += 1
+        pop, _ = self._score[unit]
+        self._score[unit] = (pop, self._tick)
+        self.engine.touch(unit)
+        return self._payload[unit]
+
+    def offer(self, unit, payload, nbytes: int, popularity: float = 0.0) -> bool:
+        """Adopt an evict-bound unit. Returns True if it stays resident
+        (the caller must then NOT evict it from the engine); on False the
+        unit didn't fit and the caller evicts as usual."""
+        if self.budget <= 0 or nbytes > self.budget:
+            return False
+        self._tick += 1
+        self._payload[unit] = payload
+        self._nbytes[unit] = int(nbytes)
+        self._score[unit] = (float(popularity), self._tick)
+        self.bytes += int(nbytes)
+        kept = True
+        while self.bytes > self.budget:
+            victim = min(self._score, key=self._score.get)
+            if victim == unit:
+                kept = False
+            self._drop(victim)
+        return kept
+
+    def units(self) -> List:
+        return list(self._payload)
+
+    def replace(self, unit, payload) -> None:
+        """Swap a resident unit's payload in place (same bytes) — the
+        executor refreshes cached rows after the optimizer writes new
+        parameters, so a hot hit never serves a stale row."""
+        if unit in self._payload:
+            self._payload[unit] = payload
+
+    def _drop(self, unit) -> None:
+        self.bytes -= self._nbytes.pop(unit)
+        del self._payload[unit], self._score[unit]
+        self.engine.evict(unit)
+
+    def clear(self) -> None:
+        for unit in list(self._payload):
+            self._drop(unit)
+
+
+def resolve_expert_hot_bytes(expert_hot_mb: int, top_k: int,
+                             expert_row_bytes: int) -> int:
+    """The hot-expert cache budget. ``expert_hot_mb`` > 0 is explicit (MiB);
+    0 (auto) holds the ``2 * top_k`` globally hottest expert rows — enough
+    that a skewed router keeps its favorites resident across steps without
+    materially moving the working-set bound. Shared by the planner's
+    residency prediction and the executor so the two always agree."""
+    if expert_hot_mb > 0:
+        return expert_hot_mb << 20
+    return 2 * max(top_k, 1) * int(expert_row_bytes)

@@ -26,8 +26,17 @@ a real, controllable code path:
 
 This engine is pure data-parallel (mp=1), matching the paper's headline
 configurations ("up to 1T parameters on a DGX-2 *without model
-parallelism*"); the GSPMD engine covers TP/CP/EP compositions. Dense
-transformer family only.
+parallelism*"); the GSPMD engine covers TP/CP/EP compositions. Families:
+dense transformer, and MoE via the layered epoch only — an MoE layer's
+attention+norm leaves flatten into one *dense row* per layer while each
+expert's weights flatten into their own independently paged *expert row*
+(``eflat``, one row per (layer, expert)); the router is a small replicated
+f32 'other' state so its master stays full precision. ``make_layer_fns``
+exposes the MoE layer as schedulable pieces: ``moe_attn`` (attention +
+routing counts), then fixed-width *waves* of router-selected expert rows
+(``moe_wave_fwd`` / ``moe_wave_vjp``) whose sum reproduces the all-resident
+computation exactly (an expert with no routed tokens contributes zero
+output and zero gradient).
 """
 from __future__ import annotations
 
@@ -42,6 +51,7 @@ from repro import compat
 from repro.config import RunConfig, ShapeConfig
 from repro.core import partition as pt
 from repro.models import common as cm
+from repro.models import moe as moe_mod
 from repro.models import transformer
 from repro.optim import adam as adam_mod
 from repro.optim import compression
@@ -87,7 +97,14 @@ class ExplicitZero3Engine:
     """
 
     def __init__(self, run: RunConfig, mesh: Mesh):
-        assert run.model.family in ("dense",), "explicit engine: dense family only"
+        assert run.model.family in ("dense", "moe"), (
+            "explicit engine: dense and moe families only")
+        self.is_moe = run.model.family == "moe"
+        if self.is_moe and run.offload.param_tier != "nvme":
+            raise ValueError(
+                "explicit-engine MoE requires param_tier='nvme': expert rows "
+                "page through the layered scheduler; use the pjit engine for "
+                "all-resident MoE")
         self.run = run
         self.mesh = mesh
         self.dp = 1
@@ -95,8 +112,13 @@ class ExplicitZero3Engine:
             self.dp *= mesh.shape[a]
         self.axis = _all_axes(mesh)
         self.rules = pt.AxisRules(table=())  # pure dp: no TP constraints
-        self.block_fn = transformer.make_block_fn(run.model, self.rules, run.parallel)
-        self.defs = transformer.param_defs(run.model)
+        if self.is_moe:
+            self.block_fn = None  # MoE layers run as make_layer_fns pieces
+            self.defs = moe_mod.param_defs(run.model)
+        else:
+            self.block_fn = transformer.make_block_fn(run.model, self.rules,
+                                                      run.parallel)
+            self.defs = transformer.param_defs(run.model)
         self.opt_tier = run.offload.opt_tier
         self.offgraph = run.opt_offgraph
         hk = (compat.host_memory_kind()
@@ -110,10 +132,18 @@ class ExplicitZero3Engine:
     # flat bandwidth-centric layout
     # ------------------------------------------------------------------
 
+    def _dense_blocks(self, blocks):
+        """The per-layer leaves that flatten into the dense row. For MoE the
+        expert weights and router page/update separately."""
+        if self.is_moe:
+            return {k: v for k, v in blocks.items() if k != "moe"}
+        return blocks
+
     def _build_layout(self):
         cfg = self.run.model
-        blocks = self.defs["blocks"]
-        leaves, treedef = jax.tree.flatten(blocks, is_leaf=lambda x: isinstance(x, pt.ParamDef))
+        blocks = self._dense_blocks(self.defs["blocks"])
+        leaf = lambda x: isinstance(x, pt.ParamDef)
+        leaves, treedef = jax.tree.flatten(blocks, is_leaf=leaf)
         shapes = [l.shape[1:] for l in leaves]  # strip layer dim
         dtypes = [l.dtype for l in leaves]
         sizes = [int(jnp.prod(jnp.array(s))) if s else 1 for s in shapes]
@@ -121,9 +151,23 @@ class ExplicitZero3Engine:
         padded = total + ((-total) % self.dp)
         self.layout = _FlatLayout(treedef, shapes, dtypes, sizes, padded)
         self.n_layers = cfg.n_layers
+        if self.is_moe:
+            # expert rows: one flat buffer per (layer, expert), same
+            # bandwidth-centric split over all ranks as the dense rows
+            rdefs = moe_mod.expert_row_defs(cfg)
+            eleaves, etreedef = jax.tree.flatten(rdefs, is_leaf=leaf)
+            eshapes = [l.shape for l in eleaves]
+            edtypes = [l.dtype for l in eleaves]
+            esizes = [int(jnp.prod(jnp.array(s))) if s else 1 for s in eshapes]
+            etotal = sum(esizes)
+            epadded = etotal + ((-etotal) % self.dp)
+            self.elayout = _FlatLayout(etreedef, eshapes, edtypes, esizes,
+                                       epadded)
+            self.n_experts = cfg.n_experts
+            self.top_k = cfg.top_k
 
     def _flatten_blocks(self, blocks, dtype) -> jax.Array:
-        leaves = jax.tree.leaves(blocks)
+        leaves = jax.tree.leaves(self._dense_blocks(blocks))
         flat = jnp.concatenate(
             [l.astype(dtype).reshape(self.n_layers, -1) for l in leaves], axis=1)
         pad = self.layout.padded - flat.shape[1]
@@ -131,15 +175,36 @@ class ExplicitZero3Engine:
             flat = jnp.pad(flat, ((0, 0), (0, pad)))
         return flat  # (L, P)
 
-    def _unflatten_layer(self, flat: jax.Array, dtype=None):
-        """flat: (P,) gathered one-layer buffer -> block param pytree."""
+    def _flatten_experts(self, moe_params, dtype=jnp.bfloat16) -> jax.Array:
+        """moe subtree (leaves (L, E, ...)) -> (L*E, Pe) expert-row buffer;
+        row index l * n_experts + e."""
+        LE = self.n_layers * self.n_experts
+        sub = {n: moe_params[n] for n in moe_mod.expert_leaf_names(self.run.model)}
+        leaves = jax.tree.leaves(sub)  # dict order matches elayout treedef
+        flat = jnp.concatenate(
+            [l.astype(dtype).reshape(LE, -1) for l in leaves], axis=1)
+        pad = self.elayout.padded - flat.shape[1]
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        return flat  # (L*E, Pe)
+
+    @staticmethod
+    def _unflatten_row(flat: jax.Array, layout: _FlatLayout, dtype=None):
         out = []
         off = 0
-        for shape, dt, size in zip(self.layout.shapes, self.layout.dtypes, self.layout.sizes):
+        for shape, dt, size in zip(layout.shapes, layout.dtypes, layout.sizes):
             piece = jax.lax.dynamic_slice_in_dim(flat, off, size, 0).reshape(shape)
             out.append(piece.astype(dtype or dt))
             off += size
-        return jax.tree.unflatten(self.layout.treedef, out)
+        return jax.tree.unflatten(layout.treedef, out)
+
+    def _unflatten_layer(self, flat: jax.Array, dtype=None):
+        """flat: (P,) gathered one-layer buffer -> block param pytree."""
+        return self._unflatten_row(flat, self.layout, dtype)
+
+    def _unflatten_expert(self, flat: jax.Array, dtype=None):
+        """flat: (Pe,) gathered one-expert buffer -> per-expert weight dict."""
+        return self._unflatten_row(flat, self.elayout, dtype)
 
     # ------------------------------------------------------------------
     # state
@@ -151,12 +216,21 @@ class ExplicitZero3Engine:
         (``optim/compression.py``) — carried as a rank-stacked residual."""
         return self.run.parallel.grad_compression == "int8"
 
+    def _other_defs(self) -> dict:
+        """Defs of the small replicated ('other') states: embeddings, final
+        norm, and — for MoE — the stacked (L, d, E) router, kept out of the
+        bf16 rows so its Adam master stays full precision."""
+        out = {"embed": self.defs["embed"], "ln_f": self.defs["ln_f"]}
+        if self.is_moe:
+            out["router"] = self.defs["blocks"]["moe"]["router"]
+        return out
+
     def _g_err_zeros(self):
         """Fresh rank-local error-feedback residuals: one fp32 copy of each
         'other' grad leaf per rank, stacked on a leading dp dim so each
         rank's residual stays its own across steps (the residual is the
         rank's private quantization error, never reduced)."""
-        other_defs = {"embed": self.defs["embed"], "ln_f": self.defs["ln_f"]}
+        other_defs = self._other_defs()
         leaf = lambda x: isinstance(x, pt.ParamDef)
         return jax.tree.map(
             lambda d: jnp.zeros((self.dp,) + tuple(d.shape), jnp.float32),
@@ -171,12 +245,17 @@ class ExplicitZero3Engine:
         params = pt.init_tree(rng, self.defs)
         flat = self._flatten_blocks(params["blocks"], jnp.bfloat16)  # (L, P)
         other = {"embed": params["embed"], "ln_f": params["ln_f"]}
+        if self.is_moe:
+            other["router"] = params["blocks"]["moe"]["router"].astype(
+                jnp.float32)
         state = {
             "flat": flat,  # bf16 compute shards
             "other": other,
             "other_opt": adam_mod.init_state(other),
             "step": jnp.zeros((), jnp.int32),
         }
+        if self.is_moe:
+            state["eflat"] = self._flatten_experts(params["blocks"]["moe"])
         if self.grad_compress:
             state["g_err"] = self._g_err_zeros()
         if not self.offgraph:  # offgraph: master/m/v live in the ArrayStore
@@ -204,7 +283,7 @@ class ExplicitZero3Engine:
             return jax.tree.map(lambda d: sh(P()), defs,
                                 is_leaf=lambda x: isinstance(x, pt.ParamDef))
 
-        other = {"embed": rep_tree(self.defs["embed"]), "ln_f": rep_tree(self.defs["ln_f"])}
+        other = {k: rep_tree(d) for k, d in self._other_defs().items()}
         other_opt = adam_mod.AdamState(
             sh(P()),
             jax.tree.map(lambda _: sh(P()), other),
@@ -218,6 +297,8 @@ class ExplicitZero3Engine:
             "other": other, "other_opt": other_opt,
             "step": sh(P()),
         }
+        if self.is_moe:
+            out["eflat"] = sh(P(None, self.axis))  # expert rows rank-split
         if self.grad_compress:
             # rank-stacked residuals: leading dp dim split over all axes
             out["g_err"] = jax.tree.map(lambda _: sh(P(self.axis)), other)
@@ -243,21 +324,21 @@ class ExplicitZero3Engine:
 
     def n_params_active(self) -> int:
         blocks = sum(self.layout.sizes) * self.n_layers
-        other_defs = {"embed": self.defs["embed"], "ln_f": self.defs["ln_f"]}
-        leaves = jax.tree.leaves(other_defs,
+        leaves = jax.tree.leaves(self._other_defs(),
                                  is_leaf=lambda x: isinstance(x, pt.ParamDef))
         other = sum(int(jnp.prod(jnp.array(d.shape))) if d.shape else 1
                     for d in leaves)
+        if self.is_moe:
+            # MoE convention: only the top_k routed experts are active
+            blocks += sum(self.elayout.sizes) * self.top_k * self.n_layers
         return blocks + other
 
     def _rep_specs(self):
         """Replicated PartitionSpec trees for the small non-flat states."""
         rep = P()
         leaf = lambda x: isinstance(x, pt.ParamDef)
-        other = {
-            "embed": jax.tree.map(lambda d: rep, self.defs["embed"], is_leaf=leaf),
-            "ln_f": jax.tree.map(lambda d: rep, self.defs["ln_f"], is_leaf=leaf),
-        }
+        other = {k: jax.tree.map(lambda d: rep, defs_k, is_leaf=leaf)
+                 for k, defs_k in self._other_defs().items()}
         opt = adam_mod.AdamState(
             rep,
             jax.tree.map(lambda _: rep, other),
@@ -283,6 +364,11 @@ class ExplicitZero3Engine:
         """
         if grads_only is None:
             grads_only = self.offgraph
+        if self.is_moe:
+            raise NotImplementedError(
+                "explicit-engine MoE has no monolithic step: expert rows page "
+                "through the layered epoch (param_tier='nvme' + "
+                "make_layer_fns)")
         run = self.run
         cfg = run.model
         tc = run.train
@@ -480,6 +566,26 @@ class ExplicitZero3Engine:
         the bandwidth-centric layout of a single materialized layer."""
         return NamedSharding(self.mesh, P(self.axis))
 
+    def expert_rows_sharding(self) -> NamedSharding:
+        """Global (W, Pe) wave of expert rows: each rank holds (W, Pe/dp)."""
+        return NamedSharding(self.mesh, P(None, self.axis))
+
+    def params_from_state(self, state) -> dict:
+        """Rebuild the bundle-shaped parameter pytree from engine state —
+        the eval/parity path (prefill with the pjit bundle's fns after a
+        layered training run)."""
+        blocks = jax.vmap(lambda r: self._unflatten_layer(r))(state["flat"])
+        if self.is_moe:
+            etree = jax.vmap(lambda r: self._unflatten_expert(r))(state["eflat"])
+            L, E = self.n_layers, self.n_experts
+            moe_p = jax.tree.map(
+                lambda a: a.reshape((L, E) + a.shape[1:]), etree)
+            moe_p["router"] = state["other"]["router"].astype(jnp.float32)
+            blocks = dict(blocks)
+            blocks["moe"] = moe_p
+        return {"embed": state["other"]["embed"], "blocks": blocks,
+                "ln_f": state["other"]["ln_f"]}
+
     def make_layer_fns(self):
         """Jitted per-layer pieces consumed by the layer scheduler
         (``param_tier=nvme``): the executor iterates (L, P/dp) rows through
@@ -518,9 +624,12 @@ class ExplicitZero3Engine:
             with compat.set_mesh(mesh):
                 return jax.jit(fn)
 
+        def _gather_blk(row):
+            return unflatten(jax.lax.all_gather(row, axis, tiled=True),
+                             jnp.bfloat16)
+
         def _block(x, row):
-            blk = unflatten(jax.lax.all_gather(row, axis, tiled=True),
-                            jnp.bfloat16)
+            blk = _gather_blk(row)
             B, S = x.shape[0], x.shape[1]
             positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
             return block_fn(x, blk, positions)
@@ -576,11 +685,8 @@ class ExplicitZero3Engine:
 
         with compat.set_mesh(mesh):
             finish = jax.jit(_finish)
-        return {
+        fns = {
             "embed_fwd": smap(_embed_fwd, (other_specs, bspec), xspec),
-            "layer_fwd": smap(_layer_fwd, (xspec, rowspec), xspec),
-            "layer_vjp": smap(_layer_vjp, (xspec, rowspec, xspec),
-                              (xspec, rowspec)),
             "accum_sumsq": smap(_accum_sumsq, (rep, rowspec), rep),
             "head": smap(_head, (xspec, other_specs, bspec),
                          (rep, xspec, other_specs)),
@@ -588,6 +694,89 @@ class ExplicitZero3Engine:
                               other_specs),
             "finish": finish,
         }
+        if not self.is_moe:
+            fns["layer_fwd"] = smap(_layer_fwd, (xspec, rowspec), xspec)
+            fns["layer_vjp"] = smap(_layer_vjp, (xspec, rowspec, xspec),
+                                    (xspec, rowspec))
+            return fns
+
+        # ---- MoE layer pieces: attention part + fixed-width expert waves --
+        # A layer materializes as 1 dense row (ln1+attn+ln2) plus, per wave,
+        # `W` expert rows gathered as a (W, Pe) buffer. Summing the wave
+        # outputs over a partition of the selected experts reproduces the
+        # all-resident moe_ffn exactly (see models/moe.py), and each wave's
+        # vjp yields the reduce-scattered expert-row gradient shards through
+        # the same all-gather transpose as the dense rows.
+        group = 1024  # token group for sorted dispatch (moe_ffn default)
+        espec = P(None, axis)
+        unflatten_e = self._unflatten_expert
+
+        def _xmid(x, row):
+            blk = _gather_blk(row)
+            B, S = x.shape[0], x.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+            a, _ = cm.attention_block(
+                blk["attn"], cm.norm(x, blk["ln1"], cfg.norm_kind),
+                positions, cfg, rules, causal=True)
+            return x + a
+
+        def _moe_attn(x, row, router_l):
+            x_mid = _xmid(x, row)
+            blk = _gather_blk(row)
+            xn = cm.norm(x_mid, blk["ln2"], cfg.norm_kind)
+            counts = moe_mod.moe_counts(router_l, xn, cfg, group=group)
+            cap = moe_mod._capacity(cfg, min(group, x.shape[1]))
+            # global routing view: which experts need paging in, plus the S1
+            # drop/load accounting — one small psum each, replicated out
+            counts_e = jax.lax.psum(jnp.sum(counts, axis=0), axis)
+            dropped = jax.lax.psum(jnp.sum(jnp.maximum(counts - cap, 0)), axis)
+            routed = jax.lax.psum(jnp.sum(counts), axis)
+            return x_mid, counts_e, dropped, routed
+
+        def _wave_fwd(x_mid, row, router_l, erows, sel_ids, sel_mask):
+            blk = _gather_blk(row)
+            xn = cm.norm(x_mid, blk["ln2"], cfg.norm_kind)
+            rows_g = jax.lax.all_gather(erows, axis, axis=1, tiled=True)
+            rtree = jax.vmap(lambda r: unflatten_e(r, jnp.bfloat16))(rows_g)
+            return moe_mod.moe_ffn_selected(router_l, rtree, xn, sel_ids,
+                                            sel_mask, cfg, rules, group=group)
+
+        def _wave_vjp(x_mid, row, router_l, erows, sel_ids, sel_mask, dy):
+            def f(x_mid, row, router_l, erows):
+                return _wave_fwd(x_mid, row, router_l, erows, sel_ids,
+                                 sel_mask)
+
+            _, vjp = jax.vjp(f, x_mid, row, router_l, erows)
+            dxm, drow, drt, der = vjp(dy)
+            # row/expert cotangents are the reduce-scattered local shards
+            # (all-gather transpose); the replicated router needs the psum
+            drt = jax.lax.psum(drt.astype(jnp.float32), axis)
+            return dxm, drow.astype(jnp.float32), drt, der.astype(jnp.float32)
+
+        def _moe_attn_vjp(x, row, dxmid):
+            _, vjp = jax.vjp(_xmid, x, row)
+            dx, drow = vjp(dxmid)
+            return dx, drow.astype(jnp.float32)
+
+        def _accum_sumsq2(acc, rows):
+            return acc + jax.lax.psum(
+                jnp.sum(rows.astype(jnp.float32) ** 2), axis)
+
+        fns.update({
+            "moe_xmid": smap(_xmid, (xspec, rowspec), xspec),
+            "moe_attn": smap(_moe_attn, (xspec, rowspec, rep),
+                             (xspec, rep, rep, rep)),
+            "moe_wave_fwd": smap(_wave_fwd,
+                                 (xspec, rowspec, rep, espec, rep, rep),
+                                 xspec),
+            "moe_wave_vjp": smap(_wave_vjp,
+                                 (xspec, rowspec, rep, espec, rep, rep, xspec),
+                                 (xspec, rowspec, rep, espec)),
+            "moe_attn_vjp": smap(_moe_attn_vjp, (xspec, rowspec, xspec),
+                                 (xspec, rowspec)),
+            "accum_sumsq2": smap(_accum_sumsq2, (rep, espec), rep),
+        })
+        return fns
 
     def state_structs(self):
         """ShapeDtypeStruct tree matching ``init_state`` for the active tier."""
@@ -596,8 +785,7 @@ class ExplicitZero3Engine:
         sh = lambda spec: NamedSharding(mesh, spec)
         L, Pl = self.n_layers, self.layout.padded
         other_specs = pt.shape_struct_tree(
-            {"embed": self.defs["embed"], "ln_f": self.defs["ln_f"]},
-            pt.AxisRules(table=()), mesh)
+            self._other_defs(), pt.AxisRules(table=()), mesh)
         opt_specs = adam_mod.AdamState(
             jax.ShapeDtypeStruct((), jnp.int32, sharding=sh(P())),
             jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32, sharding=s.sharding), other_specs),
@@ -610,6 +798,10 @@ class ExplicitZero3Engine:
             "other_opt": opt_specs,
             "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=sh(P())),
         }
+        if self.is_moe:
+            state["eflat"] = jax.ShapeDtypeStruct(
+                (L * self.n_experts, self.elayout.padded), jnp.bfloat16,
+                sharding=shardings["eflat"])
         if self.grad_compress:
             state["g_err"] = jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct(
@@ -623,6 +815,10 @@ class ExplicitZero3Engine:
         return state
 
     def lower_train(self, shape: ShapeConfig, *, grads_only: bool = None):
+        if self.is_moe:
+            raise NotImplementedError(
+                "explicit-engine MoE runs only as the layered epoch; there "
+                "is no single lowered step to inspect")
         mesh = self.mesh
         sh = lambda spec: NamedSharding(mesh, spec)
         state = self.state_structs()

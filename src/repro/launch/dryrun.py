@@ -186,7 +186,8 @@ def smoke_exec(args) -> None:
                                  prefetch_layers=args.prefetch_layers,
                                  param_quant=args.param_quant,
                                  param_read_ahead=args.read_ahead,
-                                 nvme_workers=args.nvme_workers),
+                                 nvme_workers=args.nvme_workers,
+                                 expert_hot_mb=args.expert_hot_mb),
             train=tc)
     mesh = make_local_mesh(1, 1)
 
@@ -276,6 +277,30 @@ def smoke_exec(args) -> None:
             raise SystemExit(
                 f"layer scheduler violated the residency bound: peak {peak} "
                 f"exceeds {bound} (total {total})")
+        if getattr(ex, "is_moe", False):
+            # expert-paging gate: expert rows are independent schedule units
+            # — only router-selected waves (+ the hot cache) ever reside,
+            # and the popularity/backward prefetch must actually land hits
+            epeak = int(metrics["expert_peak_resident_bytes"])
+            etotal = int(metrics["expert_total_bytes"])
+            ehit = float(metrics["expert_prefetch_hit_rate"])
+            edrop = float(metrics["moe_dropped_token_fraction"])
+            print(f"expert gate: peak_resident={epeak} total={etotal} "
+                  f"prefetch_hit_rate={ehit:.3f} dropped_frac={edrop:.4f}")
+            if not 0 < epeak < etotal:
+                raise SystemExit(
+                    f"expert gate: peak resident expert bytes {epeak} not "
+                    f"strictly below total expert bytes {etotal} — expert "
+                    "rows are not paging independently")
+            if not ehit > 0.0:
+                raise SystemExit(
+                    "expert gate: expert prefetch hit rate is zero — "
+                    "selected-set/popularity prefetch is not overlapping "
+                    "expert reads with compute")
+            if not 0.0 <= edrop <= 1.0:
+                raise SystemExit(
+                    f"expert gate: moe_dropped_token_fraction={edrop} is not "
+                    "a fraction")
 
 
 def main() -> None:
@@ -317,6 +342,9 @@ def main() -> None:
                          "and gates on trajectory parity + wire < logical")
     ap.add_argument("--read-ahead", type=int, default=2,
                     help="slow-tier param reads in flight beyond the window")
+    ap.add_argument("--expert-hot-mb", type=int, default=0,
+                    help="hot-expert cache budget in MiB for MoE expert "
+                         "paging (0 = two waves of top_k rows)")
     ap.add_argument("--nvme-workers", type=int, default=2,
                     help="worker threads per slow-tier store")
     ap.add_argument("--smoke-exec", action="store_true",

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 
@@ -31,6 +31,9 @@ class ModelBundle:
     decode_step: Callable  # (params, cache, batch) -> (logits, cache)
     cache_defs: Callable  # (batch, cache_len) -> pytree of ParamDef
     input_specs: Callable  # (ShapeConfig) -> dict of ShapeDtypeStruct
+    # (params, batch) -> (scalar, aux metrics dict); families without step
+    # metrics (everything but moe today) leave it None
+    loss_stats: Optional[Callable] = None
 
     def init(self, rng: jax.Array):
         return pt.init_tree(rng, self.defs)
@@ -74,4 +77,5 @@ def build(cfg: ModelConfig, rules: pt.AxisRules = NULL_RULES,
         decode_step=fns["decode_step"],
         cache_defs=fns["cache_defs"],
         input_specs=fns["input_specs"],
+        loss_stats=fns.get("loss_stats"),
     )

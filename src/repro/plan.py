@@ -211,8 +211,13 @@ class StateBytes:
     act_ckpt: int  # Eq. 3 activation checkpoints at grad_accum=1
     act_full: int  # Eq. 5 summed over layers (remat="none" footprint)
     n_layers: int
-    layer_params: int  # parameter count of one scheduled layer (padded)
+    layer_params: int  # parameter count of one scheduled layer (padded);
+    # for MoE this is the DENSE row only (ln1+attn+ln2) — expert rows are
+    # separate schedule units sized by ``expert_row_params``
     leaf_bytes: Tuple[int, ...]  # per-leaf bytes, sorted descending
+    expert_row_params: int = 0  # params of ONE expert row (padded); 0 = dense
+    n_experts: int = 0
+    top_k: int = 0
 
     @property
     def states_total(self) -> int:
@@ -246,19 +251,32 @@ def state_bytes(model: ModelConfig, shape: ShapeConfig,
         (int(s) * int(np.dtype(l.dtype).itemsize)
          for s, l in zip(sizes, leaves)), reverse=True))
 
-    # layer-granular view (dense family: the explicit engine's flat rows)
+    # layer-granular view (the explicit engine's flat rows). For MoE the
+    # scheduled layer row is the DENSE part only — each expert's weights are
+    # their own schedule unit, sized separately below
     n_layers = model.n_layers or (model.n_enc_layers + model.n_dec_layers) or 1
     layer_params = max(1, n_params // n_layers)
+    expert_row_params, n_experts, top_k = 0, 0, 0
     if isinstance(defs, dict) and "blocks" in defs:
         import jax
 
         from repro.core import partition as pt
 
-        blk = jax.tree.leaves(defs["blocks"],
+        blk_defs = defs["blocks"]
+        if model.family == "moe":
+            blk_defs = {k: v for k, v in blk_defs.items() if k != "moe"}
+        blk = jax.tree.leaves(blk_defs,
                               is_leaf=lambda x: isinstance(x, pt.ParamDef))
         per_layer = sum(int(np.prod(l.shape[1:])) if len(l.shape) > 1 else 1
                         for l in blk)
         layer_params = per_layer + ((-per_layer) % max(n_devices, 1))
+    if model.family == "moe":
+        from repro.models import moe as moe_mod
+
+        per_e = sum(int(np.prod(d.shape))
+                    for d in moe_mod.expert_row_defs(model).values())
+        expert_row_params = per_e + ((-per_e) % max(n_devices, 1))
+        n_experts, top_k = model.n_experts, model.top_k
 
     hd, nl = model.d_model, n_layers
     bsz, seq = shape.global_batch, shape.seq_len
@@ -281,6 +299,9 @@ def state_bytes(model: ModelConfig, shape: ShapeConfig,
         n_layers=n_layers,
         layer_params=layer_params,
         leaf_bytes=leaf_bytes,
+        expert_row_params=expert_row_params,
+        n_experts=n_experts,
+        top_k=top_k,
     )
 
 
@@ -334,6 +355,10 @@ class InfinityPlan:
     # "none" | "q8" | "q4". Shrinks predicted wire traffic and the pinned
     # budget by the compression ratio and deepens the prefetch window.
     param_quant: str = "none"
+    # MoE expert paging: device-byte budget for the hot-expert cache (LRU +
+    # popularity, core/schedule.py). 0 = the runtime default of two waves
+    # (2 * top_k expert rows); only meaningful on the zero3 layered epoch.
+    expert_hot_mb: int = 0
     objective: str = "throughput"
     feasible: bool = True
     predicted: Tuple[Tuple[str, float], ...] = ()
@@ -405,7 +430,8 @@ class InfinityPlan:
             overlap=overlap, param_read_ahead=self.read_ahead,
             prefetch_layers=self.prefetch_layers,
             nvme_workers=self.nvme_workers,
-            param_quant=self.param_quant)
+            param_quant=self.param_quant,
+            expert_hot_mb=self.expert_hot_mb)
         return RunConfig(model=self.model, parallel=parallel,
                          offload=offload, train=train or TrainConfig())
 
@@ -450,7 +476,8 @@ class InfinityPlan:
 OVERRIDABLE = ("param_tier", "grad_tier", "opt_tier", "act_tier", "engine",
                "prefetch_layers", "read_ahead", "nvme_workers",
                "pinned_buffer_mb", "remat", "grad_accum",
-               "kv_tier", "kv_slots", "kv_block_tokens", "param_quant")
+               "kv_tier", "kv_slots", "kv_block_tokens", "param_quant",
+               "expert_hot_mb")
 
 
 def _resolve_model(model: Union[str, ModelConfig]) -> ModelConfig:
@@ -575,7 +602,7 @@ def plan_run(model: Union[str, ModelConfig], shape: Union[str, ShapeConfig],
     # when the transit alone overflows HBM the genuine ZeRO-Infinity move
     # is the row stream — or the plan is honestly infeasible.
     row_bytes = PARAM_BYTES_PP * sb.layer_params
-    layered_ok = (model.family == "dense" and shape.kind == "train"
+    layered_ok = (model.family in ("dense", "moe") and shape.kind == "train"
                   and nvme_budget > 0)
     if (tiers["opt"] == "host" and tiers["grad"] == "device"
             and load("device", act_b) + sb.opt > dev_budget
@@ -656,20 +683,24 @@ def plan_run(model: Union[str, ModelConfig], shape: Union[str, ShapeConfig],
 
     # ---- engine -------------------------------------------------------
     engine = "pjit"
-    if (tiers["param"] == "nvme" and model.family == "dense"
+    if (tiers["param"] == "nvme" and model.family in ("dense", "moe")
             and shape.kind == "train"):
         engine = "zero3"
         decisions.append(Decision(
             "engine", "zero3",
             "NVMe-resident params need the explicit engine's layered epoch "
             "(O(window) device residency; the GSPMD step assembles every "
-            "leaf on device — a structural limit)"))
+            "leaf on device — a structural limit)"
+            + ("; MoE expert rows page as independent schedule units — only "
+               "the router-selected top-k stream in per wave"
+               if model.family == "moe" else "")))
     else:
         decisions.append(Decision(
             "engine", "pjit",
             "GSPMD-native engine (composes TP/CP/EP; all in-graph tiers)"
             if tiers["param"] != "nvme" else
-            "GSPMD fallback: the layered epoch is dense-family/train-only"))
+            "GSPMD fallback: the layered epoch is dense/moe-family "
+            "train-only"))
 
     # ---- scheduler window / read-ahead / workers / pinned pool --------
     batch_tokens = (shape.global_batch * shape.seq_len) // max(grad_accum, 1)
@@ -783,7 +814,21 @@ def plan_run(model: Union[str, ModelConfig], shape: Union[str, ShapeConfig],
         "remat": remat, "grad_accum": grad_accum,
         "kv_tier": kv_tier, "kv_slots": kv_slots,
         "kv_block_tokens": kv_block_tokens, "param_quant": "none",
+        "expert_hot_mb": 0,
     }
+    if engine == "zero3" and model.family == "moe" and sb.n_experts:
+        er_bytes = PARAM_BYTES_PP * sb.expert_row_params
+        wave = max(1, sb.top_k)
+        hot_b = schedule.resolve_expert_hot_bytes(0, sb.top_k, er_bytes)
+        decisions.append(Decision(
+            "expert_hot_mb", "0",
+            f"hot-expert cache at the runtime default of two waves "
+            f"(2 x top_k={sb.top_k} rows of {_fmt_bytes(er_bytes)} = "
+            f"{_fmt_bytes(hot_b)}); expert residency = "
+            f"{wave} wave rows x window + cache, never all "
+            f"{sb.n_experts} experts x {sb.n_layers} layers "
+            f"({_fmt_bytes(sb.n_layers * sb.n_experts * er_bytes)}) — "
+            f"raise --expert-hot-mb to pin more popular experts"))
     if tiers["param"] == "nvme":
         decisions.append(Decision(
             "param_quant", "none",
@@ -934,10 +979,16 @@ def _check_override_feasibility(fields, sb: StateBytes, hw: HardwareSpec,
     """Override-specific contradictions beyond raw capacity (which the
     common feasibility pass reports)."""
     if fields["engine"] == "zero3":
-        if model.family != "dense":
+        if model.family not in ("dense", "moe"):
             raise ValueError(
                 f"engine='zero3' cannot run family={model.family!r} "
-                "(dense only); drop the override or use engine='pjit'")
+                "(dense/moe only); drop the override or use engine='pjit'")
+        if model.family == "moe" and fields["param_tier"] != "nvme":
+            raise ValueError(
+                "engine='zero3' on a MoE family requires param_tier='nvme': "
+                "expert rows exist only as paged schedule units (there is no "
+                "all-resident explicit MoE path) — drop the override or add "
+                "param_tier='nvme'")
         if shape.kind != "train":
             raise ValueError("engine='zero3' supports train shapes only")
         if int(fields["grad_accum"]) > 1:
@@ -992,6 +1043,7 @@ CLI_FLAG_FIELDS = {
     "--offload-grad": "grad_tier",
     "--prefetch-layers": "prefetch_layers",
     "--param-quant": "param_quant",
+    "--expert-hot-mb": "expert_hot_mb",
     "--read-ahead": "read_ahead",
     "--nvme-workers": "nvme_workers",
     "--pinned-buffer-mb": "pinned_buffer_mb",
@@ -1132,8 +1184,31 @@ def _predict(fields, sb: StateBytes, hw: HardwareSpec, model: ModelConfig,
                     (shape.global_batch * shape.seq_len) // max(grad_accum, 1),
                     slow_bw=max(hw.tier_bandwidth("nvme"), 1.0),
                     peak_flops=hw.peak_flops)
+            w_eff = min(window, sb.n_layers)
             out["peak_resident_param_bytes"] = float(
-                min(window, sb.n_layers) * PARAM_BYTES_PP * sb.layer_params)
+                w_eff * PARAM_BYTES_PP * sb.layer_params)
+            if model.family == "moe" and sb.n_experts:
+                # expert residency bound: one wave (top_k rows) per window
+                # slot — prefetched-ahead expert reads only count once
+                # materialized — plus the hot-cache budget. The measured
+                # counter must stay at or below this (plan_residency_ok).
+                er_bytes = PARAM_BYTES_PP * sb.expert_row_params
+                wave = max(1, sb.top_k)
+                hot_b = schedule.resolve_expert_hot_bytes(
+                    int(fields.get("expert_hot_mb", 0) or 0), sb.top_k,
+                    er_bytes)
+                expert_peak = float(wave * w_eff * er_bytes + hot_b)
+                out["expert_peak_resident_bytes"] = expert_peak
+                out["expert_total_bytes"] = float(
+                    sb.n_layers * sb.n_experts * er_bytes)
+                # coarse hit-rate estimate: backward prefetches the exact
+                # selected set ahead of use; forward's first wave per layer
+                # races the reads it just issued (popularity prediction and
+                # the hot cache cover part of it) — assume all E experts get
+                # tokens at training batch sizes
+                out["expert_hit_rate"] = max(
+                    0.0, 1.0 - wave / (2.0 * max(sb.n_experts, 1)))
+                out["peak_resident_param_bytes"] += expert_peak
         else:
             window = int(fields["prefetch_layers"]) or max(
                 2, int(fields["read_ahead"]))
@@ -1146,7 +1221,11 @@ def _predict(fields, sb: StateBytes, hw: HardwareSpec, model: ModelConfig,
     # streams only the flat block rows through its stores — the small
     # replicated states (embed/head/norms and their optimizer moments)
     # stay in-graph — while the GSPMD paths stream every parameter leaf.
+    # MoE: the streamed denominator includes every expert row (the write-back
+    # and the opt stream touch all of them each step; reads touch only the
+    # selected set, so the read prediction is an all-selected upper bound).
     streamed = (sb.n_layers * sb.layer_params
+                + sb.n_layers * sb.n_experts * sb.expert_row_params
                 if fields["engine"] == "zero3" else sb.n_params)
     if tiers["param"] != "device":
         p_bytes = float(PARAM_BYTES_PP * streamed)

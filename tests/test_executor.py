@@ -220,3 +220,24 @@ def test_executor_lower_train(mesh):
         ex = InfinityExecutor(run, mesh)
         lowered = ex.lower_train(shape)
         assert "dot" in lowered.as_text() or "while" in lowered.as_text()
+
+
+def test_rank_device_hands_device_shards_to_drain(mesh, tmp_path):
+    """Regression (grad-drain overlap bug): the backward pass hands gradient
+    shards to the store workers as *device* arrays — ``_rank_device`` must
+    not pull to host on the dispatching thread. The matching store-side
+    contract (``write`` converts inside the worker closure) is covered in
+    test_offload.py."""
+    run = RunConfig(model=_tiny_cfg(),
+                    parallel=make_parallel("zero3", remat="none"),
+                    offload=make_offload(opt_tier="nvme", param_tier="nvme",
+                                         grad_tier="nvme",
+                                         nvme_dir=str(tmp_path)))
+    ex = InfinityExecutor(run, mesh)
+    arr = jax.numpy.arange(8, dtype=jax.numpy.float32)
+    shards = ex._rank_device(arr)
+    assert set(shards) == {0}
+    assert isinstance(shards[0], jax.Array)
+    assert not isinstance(shards[0], np.ndarray)
+    np.testing.assert_array_equal(np.asarray(shards[0]),
+                                  np.arange(8, dtype=np.float32))

@@ -456,3 +456,37 @@ def test_param_streamer_whole_leaf_mode(tmp_path):
     loaded = ps.load_all()
     for k in named:
         np.testing.assert_array_equal(loaded[k], named[k])
+
+
+class _ThreadProbe:
+    """__array__-convertible stand-in for a device shard that records which
+    thread pulled it to host."""
+
+    def __init__(self, arr):
+        self.arr = arr
+        self.threads = []
+
+    def __array__(self, dtype=None, copy=None):
+        self.threads.append(threading.current_thread())
+        return self.arr if dtype is None else self.arr.astype(dtype)
+
+
+def test_store_write_converts_on_worker_thread(tmp_path):
+    """Regression (grad-drain overlap bug): ``write``/``roundtrip`` accept a
+    device array and must run the device→host ``__array__`` pull on the
+    store's worker thread — converting at submit time would stall the
+    dispatching thread on the transfer and serialize the backward drain."""
+    ref = np.arange(6, dtype=np.float32)
+    for store in (HostArrayStore(pool_mb=4, overlap=True),
+                  NvmeStore(str(tmp_path), pool_mb=4, overlap=True)):
+        probe = _ThreadProbe(ref)
+        store.write("g/0", probe).result()
+        assert probe.threads, "write never converted the payload"
+        assert all(t is not threading.main_thread() for t in probe.threads)
+        np.testing.assert_array_equal(store.read("g/0").result(), ref)
+
+        probe_rt = _ThreadProbe(ref * 2)
+        got = store.roundtrip("g/1", probe_rt).result()
+        assert all(t is not threading.main_thread() for t in probe_rt.threads)
+        np.testing.assert_array_equal(got, ref * 2)
+        store.close()

@@ -226,10 +226,21 @@ def test_param_quant_roundtrips_json_and_run_config():
     assert "param_quant" in OVERRIDABLE
 
 
-def test_override_zero3_on_non_dense_family_raises():
+def test_override_zero3_family_feasibility():
+    """zero3 runs dense and moe families only — and a MoE override without
+    NVMe-resident params has no all-resident explicit path to fall back to
+    (expert rows exist only as paged schedule units)."""
+    ssm = configs.get("mamba2-370m")
+    with pytest.raises(ValueError, match="dense/moe only"):
+        plan_run(ssm, TRAIN_4K, HardwareSpec(), overrides={"engine": "zero3"})
     moe = configs.get("granite-moe-1b-a400m")
-    with pytest.raises(ValueError, match="dense only"):
+    with pytest.raises(ValueError, match="param_tier='nvme'"):
         plan_run(moe, TRAIN_4K, HardwareSpec(), overrides={"engine": "zero3"})
+    # the pairing that works: zero3 + NVMe params plans cleanly
+    p = plan_run(moe, TRAIN_4K, _NVME_HW,
+                 overrides={"engine": "zero3", "param_tier": "nvme"})
+    assert p.engine == "zero3" and p.param_tier == "nvme"
+    assert p.predictions["expert_peak_resident_bytes"] > 0
 
 
 # ---------------------------------------------------------------------------

@@ -14,8 +14,10 @@ from repro import configs
 from repro.config import RunConfig, TrainConfig, make_offload, make_parallel
 from repro.core.executor import InfinityExecutor
 from repro.core.offload import HostArrayStore, ParamStreamer
-from repro.core.schedule import (LayerSchedule, PrefetchEngine,
-                                 WorkingSetManager, default_prefetch_layers)
+from repro.core.schedule import (ExpertPopularity, HotUnitCache,
+                                 LayerSchedule, PrefetchEngine,
+                                 WorkingSetManager, default_prefetch_layers,
+                                 resolve_expert_hot_bytes)
 from repro.launch.mesh import make_local_mesh
 from repro.testing import optional_hypothesis
 
@@ -77,6 +79,35 @@ def test_schedule_plan_smoke():
     sched = LayerSchedule(6, 2, read_ahead=3)
     _check_pass(sched.forward(), list(range(6)), 2)
     _check_pass(sched.backward(), list(range(5, -1, -1)), 2)
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_schedule_units_heterogeneous_property(data):
+    """Property (tentpole): schedule units are opaque keys — a pass order
+    mixing dense layer indices with ``("x", layer, expert)`` tuples obeys
+    the same plan contract: materialize/use exactly once, residency bounded
+    by the window, eviction in use order."""
+    n_layers = data.draw(st.integers(1, 6), label="num_layers")
+    order = []
+    for layer in range(n_layers):
+        order.append(layer)
+        n_experts = data.draw(st.integers(0, 5), label=f"experts_l{layer}")
+        order.extend(("x", layer, e) for e in range(n_experts))
+    window = data.draw(st.integers(1, 6), label="window")
+    read_ahead = data.draw(st.integers(1, 4), label="read_ahead")
+    sched = LayerSchedule(len(order), window, read_ahead=read_ahead)
+    _check_pass(sched.pass_events(order), order, sched.window)
+    rev = list(reversed(order))
+    _check_pass(sched.pass_events(rev), rev, sched.window)
+
+
+def test_schedule_units_heterogeneous_smoke():
+    """Deterministic mixed-unit instance (runs without hypothesis)."""
+    order = [0, ("x", 0, 2), ("x", 0, 5), 1, ("x", 1, 0)]
+    sched = LayerSchedule(len(order), 2, read_ahead=2)
+    _check_pass(sched.pass_events(order), order, 2)
+    _check_pass(sched.pass_events(order[::-1]), order[::-1], 2)
 
 
 def test_default_prefetch_layers_bandwidth_model():
@@ -143,6 +174,99 @@ def test_prefetch_engine_accounting():
     assert stats["evictions"] == 2
     assert stats["peak_resident_param_bytes"] == v0.nbytes + v1.nbytes
     assert ws.current_bytes == 0
+
+
+def _done_future(val):
+    from concurrent.futures import Future
+
+    f = Future()
+    f.set_result(val)
+    return f
+
+
+def test_class_tagged_units_heterogeneous_sizes():
+    """Units of different byte sizes share one WorkingSetManager; a ``cls``
+    tag adds a per-class view (the expert_* metrics) without perturbing the
+    aggregate counters."""
+    dense = np.zeros((2, 4), np.float32)   # 16-byte rows
+    expert = np.zeros((4, 2), np.float32)  # 8-byte rows
+    ws = WorkingSetManager()
+    pe_d = PrefetchEngine(lambda l: [_done_future(dense[l])], ws)
+    pe_x = PrefetchEngine(lambda u: [_done_future(expert[u[2]])], ws,
+                          cls="expert")
+    ws.begin_step()
+    pe_d.prefetch(0)
+    pe_d.materialize(0)                      # dense hit, 16 bytes
+    pe_x.prefetch(("x", 0, 0))
+    pe_x.materialize(("x", 0, 0))            # expert hit, 8 bytes
+    pe_x.materialize(("x", 0, 1))            # expert miss (on-demand), 8 bytes
+    assert ws.current_bytes == 16 + 8 + 8
+    pe_x.evict(("x", 0, 0))
+    pe_x.evict(("x", 0, 1))
+    pe_d.evict(0)
+    s = ws.stats()
+    assert s["peak_resident_param_bytes"] == 32
+    assert s["prefetch_hit_rate"] == pytest.approx(2 / 3)
+    assert s["evictions"] == 3
+    # per-class view counts only the tagged engine's traffic
+    assert s["expert_peak_resident_bytes"] == 16
+    assert s["expert_prefetch_hit_rate"] == 0.5
+    assert s["expert_evictions"] == 2
+    assert ws.current_bytes == 0
+
+
+def test_hot_unit_cache_popularity_eviction_and_refresh():
+    """The hot-expert cache keeps the most popular units inside its byte
+    budget, serves hits without slow-tier traffic, and ``replace`` swaps a
+    cached payload so post-optimizer rows are never stale."""
+    rows = {e: np.full(4, e, np.float32) for e in range(3)}  # 16 bytes each
+    fetches = []
+
+    def fetch(u):
+        fetches.append(u)
+        return [_done_future(rows[u[2]])]
+
+    ws = WorkingSetManager()
+    pe = PrefetchEngine(fetch, ws, cls="expert")
+    hot = HotUnitCache(2 * 16, pe)  # budget: two rows
+    units = [("x", 0, e) for e in range(3)]
+    vals = {u: pe.materialize(u)[0] for u in units}
+    assert ws.current_bytes == 3 * 16
+    # offer all three: the budget holds two, the least popular one goes
+    assert hot.offer(units[0], vals[units[0]], 16, popularity=0.9)
+    assert hot.offer(units[1], vals[units[1]], 16, popularity=0.1)
+    assert hot.offer(units[2], vals[units[2]], 16, popularity=0.5)
+    assert set(hot.units()) == {units[0], units[2]}
+    assert ws.current_bytes == 2 * 16  # the victim's bytes were evicted
+    # a hot get is a hit with no fetch traffic
+    n_fetch = len(fetches)
+    got = hot.get(units[0])
+    np.testing.assert_array_equal(got, rows[0])
+    assert len(fetches) == n_fetch and ws.hits == 1
+    assert hot.get(units[1]) is None  # evicted: miss
+    # optimizer wrote new params: refresh in place, next get serves them
+    fresh = np.full(4, 42.0, np.float32)
+    hot.replace(units[0], fresh)
+    np.testing.assert_array_equal(hot.get(units[0]), fresh)
+    hot.clear()
+    assert ws.current_bytes == 0 and not hot.units()
+
+
+def test_expert_popularity_ema_predicts_top():
+    pop = ExpertPopularity(decay=0.5)
+    pop.update(0, [0.0, 1.0, 0.0, 0.0])
+    pop.update(0, [0.0, 0.5, 0.5, 0.0])
+    assert pop.top(0, 2) == [1, 2]
+    assert pop.score(0, 1) > pop.score(0, 2) > pop.score(0, 0) == 0.0
+    assert pop.top(1, 2) == []  # unseen layer: no prediction
+
+
+def test_resolve_expert_hot_bytes():
+    """Explicit MiB wins; auto (0) holds two waves of top-k rows — shared by
+    the planner prediction and the executor so they agree."""
+    assert resolve_expert_hot_bytes(2, 4, 1000) == 2 << 20
+    assert resolve_expert_hot_bytes(0, 4, 1000) == 8000
+    assert resolve_expert_hot_bytes(0, 0, 1000) == 2000
 
 
 # ---------------------------------------------------------------------------

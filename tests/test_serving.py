@@ -145,6 +145,32 @@ def test_kv_block_roundtrip_nvme(tmp_path):
     assert not os.listdir(tmp_path)  # delete() freed the NVMe capacity
 
 
+def test_kv_start_fetch_handle_matches_blocking_fetch(tmp_path):
+    """Regression (admission-stall bug): ``start_fetch`` returns a windowed
+    non-blocking handle — at most ``prefetch_blocks`` reads in flight, a
+    never-blocking ``poll``, and a ``result()`` that assembles exactly what
+    the blocking ``fetch`` returns."""
+    rng = np.random.default_rng(7)
+    cache = _toy_cache(rng, S=20)
+    kv = kvcache.PagedKVCache(NvmeStore(str(tmp_path), pool_mb=4),
+                              block_tokens=4, prefetch_blocks=2)
+    kv.park("s0", cache, 20)
+    kv.flush()
+    h = kv.start_fetch("s0", 32)
+    assert len(h._inflight) <= kv.prefetch_blocks  # windowed, not all-at-once
+    h.poll()  # harvest-and-refill never blocks
+    assert len(h._inflight) <= kv.prefetch_blocks
+    got, glen = h.result()
+    ref, rlen = kv.fetch("s0", 32)
+    assert glen == rlen == 20
+    for name in ("k", "v", "aux"):
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(ref[name]))
+    got2, glen2 = h.result()  # idempotent: the assembled tree is cached
+    assert got2 is got and glen2 == glen
+    assert h.done()
+
+
 def _serve(argv):
     return serve.run_serve(serve._parse(argv), argv)
 
@@ -185,6 +211,19 @@ def test_slot_finish_contributes_exactly_k_tokens():
     k = base["generated"][1].index(t) + 1
     assert len(got["generated"][1]) == k
     assert all(got["done"])
+
+
+def test_admission_stall_reported_separately_from_admission():
+    """Regression (admission-stall bug): admission KV fetches start when the
+    sequence enters the wait queue and overlap decode; the stall that the
+    overlap did not cover is reported as ``admit_stall_s``, bounded by the
+    total admission time."""
+    out = _serve(["--arch", "smollm-135m", "--smoke", "--batch", "5",
+                  "--prompt-len", "16", "--new-tokens", "6",
+                  "--kv-tier", "host", "--kv-slots", "2"])
+    t = out["timings"]
+    assert out["admissions"] == 3 and all(out["done"])
+    assert 0.0 <= t["admit_stall_s"] <= t["admit_s"]
 
 
 def test_kv_residency_stays_inside_planned_budget():
