@@ -353,6 +353,19 @@ def executor_micro(engine: str = "pjit", tier: str = "device",
         us = (time.perf_counter() - t0) / 3 * 1e6
         toks = 4 * 128
         emit(f"executor/{cell}/train_step", us, f"{toks / (us / 1e6):.0f}tok_s")
+        # stall attribution (runtime/trace.py) — present when --trace is on:
+        # measured Eq. 6 efficiency and compute/io_wait fractions of the
+        # final step, next to the plan's prediction emitted above
+        if "trace_measured_efficiency" in m:
+            wall = float(m.get("trace_wall_s", 0.0)) or 1.0
+            emit(f"executor/{cell}/trace_measured_efficiency", 0.0,
+                 f"{float(m['trace_measured_efficiency']):.4f}")
+            emit(f"executor/{cell}/trace_overlap_frac", 0.0,
+                 f"{float(m['trace_overlap_frac']):.4f}")
+            emit(f"executor/{cell}/trace_compute_frac", 0.0,
+                 f"{float(m['trace_compute_s']) / wall:.4f}")
+            emit(f"executor/{cell}/trace_io_wait_frac", 0.0,
+                 f"{float(m['trace_io_wait_s']) / wall:.4f}")
         # per-tier effective bandwidth roofline terms: the final step's
         # per-step counters (param-in / grad-out / opt-read/write)
         for k in ("param_in", "param_out", "grad_out", "opt_read", "opt_write"):
@@ -584,6 +597,45 @@ BENCHES = {
 }
 
 
+def write_rollup() -> str:
+    """Satellite artifact: one BENCH_<timestamp>.json per invocation rolling
+    up every emitted row plus a per-cell summary (tokens/s, predicted and
+    measured efficiency, stall fractions) for the executor cells."""
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+    os.makedirs(d, exist_ok=True)
+    ts = time.strftime("%Y%m%d_%H%M%S")
+    cells = {}
+    for name, us, derived in ROWS:
+        parts = name.split("/")
+        if parts[0] != "executor" or len(parts) != 3:
+            continue
+        c = cells.setdefault(parts[1], {})
+        key, val = parts[2], derived
+        if key == "train_step":
+            c["us_per_step"] = us
+            try:
+                c["tokens_per_s"] = float(str(derived).replace("tok_s", ""))
+            except ValueError:
+                pass
+        elif key in ("plan_efficiency", "trace_measured_efficiency",
+                     "trace_overlap_frac", "trace_compute_frac",
+                     "trace_io_wait_frac", "prefetch_hit_rate"):
+            try:
+                c[key] = float(val)
+            except (TypeError, ValueError):
+                pass
+    path = os.path.join(d, f"BENCH_{ts}.json")
+    with open(path, "w") as f:
+        json.dump({
+            "timestamp": ts,
+            "argv": sys.argv[1:],
+            "cells": cells,
+            "rows": [{"name": n, "us_per_call": u, "derived": str(v)}
+                     for n, u, v in ROWS],
+        }, f, indent=1)
+    return os.path.abspath(path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated bench keys")
@@ -614,10 +666,19 @@ def main() -> None:
     ap.add_argument("--expert-hot-mb", type=int, default=0,
                     help="hot-expert cache budget in MB for MoE runs "
                          "(0 = auto: two waves of expert rows)")
+    ap.add_argument("--trace", nargs="?", const="trace.json", default=None,
+                    metavar="OUT.json",
+                    help="record spans across the benchmarks and write a "
+                         "Chrome/Perfetto trace (runtime/trace.py); the "
+                         "`executor` bench additionally emits measured "
+                         "efficiency / stall-fraction rows")
     from repro import plan as plan_mod
+    from repro.runtime import trace
 
     plan_mod.add_plan_args(ap)
     args = ap.parse_args()
+    if args.trace:
+        trace.enable()
     keys = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for k in keys:
@@ -632,6 +693,12 @@ def main() -> None:
                            expert_hot_mb=args.expert_hot_mb)
         else:
             BENCHES[k]()
+    path = write_rollup()
+    print(f"rollup: {path}", file=sys.stderr)
+    if args.trace:
+        trace.export_chrome(args.trace)
+        print(f"trace: wrote {args.trace} "
+              f"({len(trace.TRACER.events())} spans)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -45,6 +45,8 @@ effective-bandwidth roofline per tier.
 from __future__ import annotations
 
 import os
+import threading
+import time
 from typing import Dict, Optional, Protocol, runtime_checkable
 
 import jax
@@ -61,6 +63,7 @@ from repro.core.offload import (ArrayStore, ChunkedAdamOffload, HostArrayStore,
                                 NvmeStore, ParamStreamer, PinnedBufferPool)
 from repro.core.zero import ExplicitZero3Engine
 from repro.optim import adam as adam_mod
+from repro.runtime import trace
 
 
 @runtime_checkable
@@ -167,6 +170,12 @@ class InfinityExecutor:
         self._pe_x_stream: Optional[ParamStreamer] = None
         self._hot: Optional[sched_mod.HotUnitCache] = None
         self._pop: Optional[sched_mod.ExpertPopularity] = None
+        # per-step stall attribution (populated when the tracer is enabled):
+        # each step appends its attribute_window() dict, so CLI surfaces can
+        # format the run-level report without re-deriving from raw spans
+        self._trace_t0: Optional[float] = None
+        self._trace_tid: Optional[int] = None
+        self.trace_attributions: list = []
 
     # ------------------------------------------------------------------
     # state
@@ -198,6 +207,7 @@ class InfinityExecutor:
         else:
             store = HostArrayStore(pool=self._pool, overlap=off.overlap,
                                    workers=off.nvme_workers)
+        store.trace_cls = name  # tag this class's I/O spans for attribution
         if name == "param":
             store = qformat.maybe_wrap_store(store, off.param_quant)
         return store
@@ -497,11 +507,17 @@ class InfinityExecutor:
         per-step per-tier bandwidth metrics."""
 
         def step(state, batch):
+            self._trace_step_begin()
             marks = {name: s.mark() for name, s in self._active_stores()}
             if self.param_nvme:
                 self._ws.begin_step()
                 state = self._load_params(state)
-            new_state, metrics = inner(state, batch)
+            with trace.span("jit_step", sys="compute", attr="compute"):
+                new_state, metrics = inner(state, batch)
+                if trace.enabled():
+                    # jit dispatch is async; land the device work inside the
+                    # compute span so attribution sees it on the main thread
+                    jax.block_until_ready(metrics)
             if self.param_nvme:
                 self._save_params(new_state)
                 new_state = self._drop_param_leaves(new_state)
@@ -600,7 +616,8 @@ class InfinityExecutor:
 
             self._sched = sched_mod.LayerSchedule(
                 L, window, read_ahead=off.param_read_ahead)
-            self._pe = sched_mod.PrefetchEngine(fetch, self._ws)
+            self._pe = sched_mod.PrefetchEngine(fetch, self._ws,
+                                                trace_cls="param")
             self._pe_stream = stream
         return self._sched, self._pe
 
@@ -619,7 +636,8 @@ class InfinityExecutor:
 
             self._sched = sched_mod.LayerSchedule(
                 len(names), window, read_ahead=off.param_read_ahead)
-            self._pe = sched_mod.PrefetchEngine(fetch, self._ws)
+            self._pe = sched_mod.PrefetchEngine(fetch, self._ws,
+                                                trace_cls="param")
             self._pe_stream = stream
         return self.param_stream.names(), self._sched, self._pe
 
@@ -654,9 +672,11 @@ class InfinityExecutor:
 
     def _save_params(self, new_state) -> None:
         """Write the step's updated params back to the param store."""
-        self.param_stream.save_all(
-            {k: np.asarray(v) for k, v in
-             _flatten_with_paths(new_state["params"]).items()})
+        with trace.span("param_writeback", sys="optim", attr="io_wait",
+                        cls="param"):
+            self.param_stream.save_all(
+                {k: np.asarray(v) for k, v in
+                 _flatten_with_paths(new_state["params"]).items()})
 
     # ------------------------------------------------------------------
     # the layered epoch (explicit engine, param_tier=nvme)
@@ -664,10 +684,13 @@ class InfinityExecutor:
 
     def _device_row(self, vals, sharding):
         """Per-rank host rows (rank order) -> global (P,) device row."""
-        devices = list(np.asarray(self.mesh.devices).flat)
-        pieces = [jax.device_put(vals[self._rank_of[d]], d) for d in devices]
-        shape = (sum(int(v.shape[0]) for v in vals),)
-        return jax.make_array_from_single_device_arrays(shape, sharding, pieces)
+        with trace.span("h2d_row", sys="store", cls="param"):
+            devices = list(np.asarray(self.mesh.devices).flat)
+            pieces = [jax.device_put(vals[self._rank_of[d]], d)
+                      for d in devices]
+            shape = (sum(int(v.shape[0]) for v in vals),)
+            return jax.make_array_from_single_device_arrays(
+                shape, sharding, pieces)
 
     def _layered_step(self):
         """One train step as two scheduler-driven passes over the layers.
@@ -686,6 +709,7 @@ class InfinityExecutor:
         tc = self.run.train
 
         def step(state, batch):
+            self._trace_step_begin()
             marks = {name: s.mark() for name, s in self._active_stores()}
             if self._layer_fns is None:
                 self._layer_fns = eng.make_layer_fns()
@@ -742,15 +766,22 @@ class InfinityExecutor:
                 state["other"], state["other_opt"], state["step"],
                 g_head, g_emb, sumsq)
 
+            # pulling lr to host synchronizes on `finish` — and transitively
+            # on the whole dispatched forward/backward: this is where the
+            # step's device compute lands on the critical path
+            with trace.span("device_sync", sys="compute", attr="compute"):
+                lr_host = float(fm["lr"])
+
             # streamed per-layer Adam; updated bf16 rows go straight back
             new_master = self.offload.step(
-                gdict, lr=float(fm["lr"]), beta1=tc.beta1, beta2=tc.beta2,
+                gdict, lr=lr_host, beta1=tc.beta1, beta2=tc.beta2,
                 eps=tc.eps, weight_decay=tc.weight_decay)
-            for key, m32 in new_master.items():
-                rank, layer = key.split("/")  # "rank<r>/l<i>"
-                self.param_stream.write_row(
-                    rank, int(layer[1:]), m32.astype(ml_dtypes.bfloat16))
-            self.param_stream.flush()
+            with trace.span("param_writeback", sys="optim", cls="param"):
+                for key, m32 in new_master.items():
+                    rank, layer = key.split("/")  # "rank<r>/l<i>"
+                    self.param_stream.write_row(
+                        rank, int(layer[1:]), m32.astype(ml_dtypes.bfloat16))
+                self.param_stream.flush()
             if self.grad_store is not None:
                 self.grad_store.flush()
 
@@ -824,6 +855,7 @@ class InfinityExecutor:
         L = eng.n_layers
 
         def step(state, batch):
+            self._trace_step_begin()
             marks = {name: s.mark() for name, s in self._active_stores()}
             if self._layer_fns is None:
                 self._layer_fns = eng.make_layer_fns()
@@ -978,22 +1010,25 @@ class InfinityExecutor:
                 state["other"], state["other_opt"], state["step"],
                 g_head, g_emb, sumsq)
 
+            with trace.span("device_sync", sys="compute", attr="compute"):
+                lr_host = float(fm["lr"])
             new_master = self.offload.step(
-                gdict, lr=float(fm["lr"]), beta1=tc.beta1, beta2=tc.beta2,
+                gdict, lr=lr_host, beta1=tc.beta1, beta2=tc.beta2,
                 eps=tc.eps, weight_decay=tc.weight_decay)
-            for key, m32 in new_master.items():
-                rank, layer = key.split("/")  # "[x]rank<r>/l<i>"
-                self.param_stream.write_row(
-                    rank, int(layer[1:]), m32.astype(ml_dtypes.bfloat16))
-            # refresh hot-cached rows from the just-written masters so next
-            # step's hot hits serve the updated parameters (host->device put
-            # only — the saved traffic is the slow-tier read)
-            for u in hot.units():
-                _, l, e = u
-                vals = [new_master[f"xrank{r}/l{l * E + e}"].astype(
-                    ml_dtypes.bfloat16) for r in ranks]
-                hot.replace(u, self._device_row(vals, row_sh))
-            self.param_stream.flush()
+            with trace.span("param_writeback", sys="optim", cls="param"):
+                for key, m32 in new_master.items():
+                    rank, layer = key.split("/")  # "[x]rank<r>/l<i>"
+                    self.param_stream.write_row(
+                        rank, int(layer[1:]), m32.astype(ml_dtypes.bfloat16))
+                # refresh hot-cached rows from the just-written masters so
+                # next step's hot hits serve the updated parameters (host->
+                # device put only — the saved traffic is the slow-tier read)
+                for u in hot.units():
+                    _, l, e = u
+                    vals = [new_master[f"xrank{r}/l{l * E + e}"].astype(
+                        ml_dtypes.bfloat16) for r in ranks]
+                    hot.replace(u, self._device_row(vals, row_sh))
+                self.param_stream.flush()
             if self.grad_store is not None:
                 self.grad_store.flush()
 
@@ -1075,6 +1110,29 @@ class InfinityExecutor:
             out.append(("opt", self.opt_store))
         return out
 
+    # ------------------------------------------------------------------
+    # per-step stall attribution (tracer-backed)
+    # ------------------------------------------------------------------
+
+    def _trace_step_begin(self) -> None:
+        """Mark the step's wall-clock window for stall attribution."""
+        if trace.enabled():
+            self._trace_t0 = time.perf_counter()
+            self._trace_tid = threading.get_ident()
+
+    def _with_trace_attribution(self, out: dict) -> dict:
+        """Partition the finished step's wall time from the recorded spans
+        and surface the buckets as ``trace_*`` metrics next to the plan's
+        predicted ``plan_efficiency`` — the measured side of Eq. 6."""
+        if not (trace.enabled() and self._trace_t0 is not None):
+            return out
+        att = trace.TRACER.attribute_window(
+            self._trace_t0, time.perf_counter(), main_tid=self._trace_tid)
+        self._trace_t0 = None
+        self.trace_attributions.append(att)
+        out.update(trace.flatten_attribution(att))
+        return out
+
     def _with_tier_metrics(self, metrics, marks) -> dict:
         """Per-step, per-tier counters: param-in (store->device), param-out
         (write-back), grad-out (drain), opt-read/opt-write (the streamed
@@ -1124,7 +1182,7 @@ class InfinityExecutor:
         if self.param_nvme:  # scheduler residency / overlap effectiveness
             out.update(self._ws.stats())
             out["param_total_bytes"] = self.total_param_bytes
-        return self._with_plan_crosscheck(out)
+        return self._with_plan_crosscheck(self._with_trace_attribution(out))
 
     def _with_plan_crosscheck(self, out: dict) -> dict:
         """Predicted-vs-measured: when this executor was built from an

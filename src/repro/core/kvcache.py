@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.offload import ArrayStore
+from repro.runtime import trace
 
 SEQ_AXIS = 2  # (layers, batch, seq, kv_heads, head_dim)
 BATCH_AXIS = 1
@@ -196,6 +197,8 @@ class PagedKVCache:
                 nbytes += arr.nbytes
                 entries.append((ps, 0, arr.shape))
         self._layout[seq_id] = (treedef, int(length), entries, nbytes)
+        trace.instant("kv_park", sys="kv", cls="kv", unit=seq_id,
+                      nbytes=nbytes, length=int(length))
         return nbytes
 
     def start_fetch(self, seq_id: str, cache_len: int) -> "KVFetchHandle":
@@ -298,10 +301,18 @@ class KVFetchHandle:
 
         if self._out is not None:
             return self._out
-        while self._inflight:
-            ps, fut = self._inflight.popleft()
-            self._parts[ps].append(fut.result())
-            self._issue()
+        if self._inflight:
+            # the uncovered remainder of the windowed read-back — zero when
+            # poll()s during decode already drained the window
+            with trace.span("kv_fetch_wait", sys="kv", attr="io_wait",
+                            cls="kv") as sp:
+                n = 0
+                while self._inflight:
+                    ps, fut = self._inflight.popleft()
+                    self._parts[ps].append(fut.result())
+                    self._issue()
+                    n += 1
+                sp.set(n_blocks=n)
         leaves = []
         for ps, nb, shape in self._entries:
             if nb:

@@ -45,6 +45,8 @@ from typing import Dict, Iterator, List, Optional, Tuple
 import ml_dtypes  # noqa: F401  (registers bfloat16 & friends with numpy)
 import numpy as np
 
+from repro.runtime import trace
+
 DEFAULT_CHUNK_ELEMS = 1 << 22  # 4M elements per pipeline chunk
 
 
@@ -105,7 +107,9 @@ class PinnedBufferPool:
                     buf = np.empty(cls, dtype=np.uint8)
                     self._resident += cls
                     break
-                self._lock.wait(timeout=10.0)
+                # genuine backpressure: the fixed pinned supply is exhausted
+                with trace.span("pinned_pool_wait", sys="store", nbytes=nbytes):
+                    self._lock.wait(timeout=10.0)
             self._outstanding += cls
             self.peak_outstanding = max(self.peak_outstanding, self._outstanding)
             self.peak_resident = max(self.peak_resident, self._resident)
@@ -130,6 +134,9 @@ class ArrayStore:
     """
 
     kind = "abstract"
+    # state class this store carries ("param"/"grad"/"opt"/"kv"/...), set by
+    # whoever builds the store; tags every I/O span for stall attribution
+    trace_cls: Optional[str] = None
 
     def __init__(self, pool: Optional[PinnedBufferPool] = None, pool_mb: int = 64,
                  workers: int = 2, overlap: bool = True):
@@ -206,6 +213,26 @@ class ArrayStore:
         free capacity, they do not move bytes over the link."""
         raise NotImplementedError
 
+    # -- traced sync wrappers (the span is where the bytes move) ------------
+
+    def _traced_write(self, key: str, arr) -> None:
+        # non-overlap mode runs this on the caller's thread — there the time
+        # is a critical-path wait, not hidden worker busy time
+        attr = "io" if self.overlap else "io_wait"
+        with trace.span(f"{self.kind}_write", sys="store", attr=attr,
+                        cls=self.trace_cls, key=key) as sp:
+            a = np.asarray(arr)
+            sp.set(nbytes=int(a.nbytes), wire_bytes=int(a.nbytes))
+            self._write_sync(key, a)
+
+    def _traced_read(self, key: str) -> np.ndarray:
+        attr = "io" if self.overlap else "io_wait"
+        with trace.span(f"{self.kind}_read", sys="store", attr=attr,
+                        cls=self.trace_cls, key=key) as sp:
+            out = self._read_sync(key)
+            sp.set(nbytes=int(out.nbytes), wire_bytes=int(out.nbytes))
+            return out
+
     # -- async API ----------------------------------------------------------
 
     def write(self, key: str, arr: np.ndarray) -> Future:
@@ -215,22 +242,19 @@ class ArrayStore:
         at submit time would stall the dispatching thread on the transfer)."""
         if not self.overlap:
             f: Future = Future()
-            f.set_result(self._write_sync(key, np.asarray(arr)))
+            f.set_result(self._traced_write(key, arr))
             return f
 
-        def _wr():
-            self._write_sync(key, np.asarray(arr))
-
-        fut = self._pool_exec.submit(_wr)
+        fut = self._pool_exec.submit(self._traced_write, key, arr)
         self._pending.append(fut)
         return fut
 
     def read(self, key: str) -> Future:
         if not self.overlap:
             f: Future = Future()
-            f.set_result(self._read_sync(key))
+            f.set_result(self._traced_read(key))
             return f
-        return self._pool_exec.submit(self._read_sync, key)
+        return self._pool_exec.submit(self._traced_read, key)
 
     def roundtrip(self, key: str, arr: np.ndarray) -> Future:
         """Drain ``arr`` into the store and resolve to the store-resident
@@ -242,13 +266,13 @@ class ArrayStore:
         compute immediately instead of serializing on the transfer."""
         if not self.overlap:
             f: Future = Future()
-            self._write_sync(key, np.asarray(arr))
-            f.set_result(self._read_sync(key))
+            self._traced_write(key, arr)
+            f.set_result(self._traced_read(key))
             return f
 
         def _rt():
-            self._write_sync(key, np.asarray(arr))
-            return self._read_sync(key)
+            self._traced_write(key, arr)
+            return self._traced_read(key)
 
         fut = self._pool_exec.submit(_rt)
         self._pending.append(fut)
@@ -261,9 +285,13 @@ class ArrayStore:
             self._pool_exec.shutdown(wait=True)
 
     def flush(self) -> None:
-        for f in self._pending:
-            f.result()
-        self._pending.clear()
+        if not self._pending:
+            return
+        with trace.span(f"{self.kind}_flush", sys="store", attr="io_wait",
+                        cls=self.trace_cls, n_pending=len(self._pending)):
+            for f in self._pending:
+                f.result()
+            self._pending.clear()
 
     def keys(self):
         raise NotImplementedError
@@ -489,7 +517,9 @@ class ChunkedAdamOffload:
             if key not in g_cache:
                 g = flat_grads[key]
                 if hasattr(g, "result"):  # a draining Future
-                    g = g.result()
+                    with trace.span("grad_drain_wait", sys="optim",
+                                    attr="io_wait", cls="grad", key=key):
+                        g = g.result()
                 g_cache[key] = np.asarray(g, dtype=np.float32).reshape(-1)
             return g_cache[key][off: off + ln]
 
@@ -508,10 +538,14 @@ class ChunkedAdamOffload:
         for i, item in enumerate(work):
             key, ci, off, ln = item
             nxt = read_chunk(work[i + 1]) if i + 1 < len(work) else None
-            p, m, v = (f.result() for f in pending)
-            p, m, v = _adam_update_numpy(p, m, v, g_slice(key, off, ln), lr,
-                                         beta1, beta2, eps, weight_decay,
-                                         c1, c2)
+            with trace.span("opt_read_wait", sys="optim", attr="io_wait",
+                            cls="opt", key=key, unit=ci):
+                p, m, v = (f.result() for f in pending)
+            with trace.span("opt_update", sys="optim", attr="compute",
+                            cls="opt", key=key, unit=ci):
+                p, m, v = _adam_update_numpy(p, m, v, g_slice(key, off, ln),
+                                             lr, beta1, beta2, eps,
+                                             weight_decay, c1, c2)
             out[key][off: off + p.size] = p
             self.store.write(f"{key}.master.{ci}", p)  # async write-back
             self.store.write(f"{key}.m.{ci}", m)
@@ -572,7 +606,9 @@ class ParamStreamer:
                 inflight.append((name, self.store.read(f"{name}/c{i}")))
                 wi += 1
             name, fut = inflight.popleft()
-            results[name].append(fut.result())
+            with trace.span("param_load_wait", sys="store", attr="io_wait",
+                            cls="param", key=name):
+                results[name].append(fut.result())
         out = {}
         for name, (n, split) in self._layout.items():
             out[name] = np.stack(results[name]) if split else results[name][0]

@@ -45,6 +45,8 @@ from typing import Dict, Optional, Tuple
 import ml_dtypes  # noqa: F401  (registers bfloat16 & friends with numpy)
 import numpy as np
 
+from repro.runtime import trace
+
 MAGIC = b"QFMT"
 BLOCK = 32  # elements per quantization block (both formats)
 FORMATS = ("q8", "q4")
@@ -280,7 +282,12 @@ class _DecodedFuture:
         wire = self._fut.result(timeout)
         with self._lock:
             if not self._have:
-                self._value = decode_array(wire)
+                with trace.span("wire_decode", sys="store",
+                                cls=self._store.trace_cls,
+                                fmt=self._store.fmt) as sp:
+                    self._value = decode_array(wire)
+                    sp.set(nbytes=int(self._value.nbytes),
+                           wire_bytes=int(np.asarray(wire).nbytes))
                 self._store._count_logical_read(self._value.nbytes)
                 self._have = True
         return self._value
@@ -382,10 +389,17 @@ class QuantizedArrayStore:
 
     # -- the async store surface ----------------------------------------
 
+    def _encode_traced(self, arr: np.ndarray) -> np.ndarray:
+        with trace.span("wire_encode", sys="store", cls=self.trace_cls,
+                        fmt=self.fmt, nbytes=int(arr.nbytes)) as sp:
+            wire = encode_array(arr, self.fmt)
+            sp.set(wire_bytes=int(wire.nbytes))
+        return wire
+
     def write(self, key: str, arr: np.ndarray) -> Future:
         arr = np.asarray(arr)
         self._count_logical_write(arr.nbytes)
-        return self.inner.write(key, encode_array(arr, self.fmt))
+        return self.inner.write(key, self._encode_traced(arr))
 
     def read(self, key: str) -> "_DecodedFuture":
         return _DecodedFuture(self.inner.read(key), self)
@@ -394,7 +408,7 @@ class QuantizedArrayStore:
         arr = np.asarray(arr)
         self._count_logical_write(arr.nbytes)
         return _DecodedFuture(
-            self.inner.roundtrip(key, encode_array(arr, self.fmt)), self)
+            self.inner.roundtrip(key, self._encode_traced(arr)), self)
 
     def flush(self) -> None:
         self.inner.flush()
@@ -411,6 +425,14 @@ class QuantizedArrayStore:
     @property
     def kind(self) -> str:
         return self.inner.kind
+
+    @property
+    def trace_cls(self):
+        return getattr(self.inner, "trace_cls", None)
+
+    @trace_cls.setter
+    def trace_cls(self, value) -> None:
+        self.inner.trace_cls = value
 
     @property
     def pool(self):

@@ -49,6 +49,7 @@ import math
 from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
 from repro.core import model_math
+from repro.runtime import trace
 
 # Paper Fig. 2b / Sec. 4 nominal rates used when no measured bandwidth is
 # available: per-device NVMe bandwidth and per-device peak throughput.
@@ -250,15 +251,21 @@ class PrefetchEngine:
     """
 
     def __init__(self, fetch: Callable[[object], list], ws: WorkingSetManager,
-                 cls: Optional[str] = None):
+                 cls: Optional[str] = None,
+                 trace_cls: Optional[str] = None):
         self._fetch = fetch
         self.ws = ws
         self.cls = cls  # unit class tag for per-class working-set metrics
+        # span class tag: defaults to the metrics class; lets an unclassed
+        # engine (dense param rows) still attribute its stalls to "param"
+        self.trace_cls = trace_cls if trace_cls is not None else cls
         self._inflight: Dict[object, list] = {}
         self._resident: Dict[object, int] = {}  # unit -> materialized nbytes
 
     def prefetch(self, unit) -> None:
         if unit not in self._inflight and unit not in self._resident:
+            trace.instant("prefetch_submit", sys="sched",
+                          cls=self.trace_cls, unit=unit)
             self._inflight[unit] = self._fetch(unit)
 
     def touch(self, unit) -> bool:
@@ -266,6 +273,8 @@ class PrefetchEngine:
         hit and returns True; returns False if the unit is not resident."""
         if unit not in self._resident:
             return False
+        trace.instant("hot_hit", sys="sched", cls=self.trace_cls,
+                      unit=unit)
         self.ws.on_hit(self.cls)
         return True
 
@@ -274,8 +283,13 @@ class PrefetchEngine:
         hit = futs is not None and all(f.done() for f in futs)
         if futs is None:
             futs = self._fetch(unit)
-        vals = [f.result() for f in futs]
-        nbytes = sum(int(v.nbytes) for v in vals)
+        # the scheduler-side stall: zero-length when the prefetch fully hid
+        # the slow-tier latency, the whole fetch when issued on demand
+        with trace.span("materialize_wait", sys="sched", attr="io_wait",
+                        cls=self.trace_cls, unit=unit, hit=hit) as sp:
+            vals = [f.result() for f in futs]
+            nbytes = sum(int(v.nbytes) for v in vals)
+            sp.set(nbytes=nbytes)
         self._resident[unit] = nbytes
         self.ws.on_materialize(nbytes, hit, self.cls)
         return vals
@@ -283,6 +297,8 @@ class PrefetchEngine:
     def evict(self, unit) -> None:
         nbytes = self._resident.pop(unit, None)
         if nbytes is not None:
+            trace.instant("evict", sys="sched", cls=self.trace_cls,
+                          unit=unit, nbytes=nbytes)
             self.ws.on_evict(nbytes, self.cls)
 
     def run_events(self, events, *, on_materialize, on_use, on_evict=None,
@@ -368,6 +384,8 @@ class HotUnitCache:
     def get(self, unit):
         """Cached payload for a resident unit (None on miss); records a hit."""
         if unit not in self._payload:
+            trace.instant("hot_miss", sys="sched",
+                          cls=self.engine.trace_cls, unit=unit)
             return None
         self._tick += 1
         pop, _ = self._score[unit]

@@ -55,10 +55,20 @@ from repro.models import moe as moe_mod
 from repro.models import transformer
 from repro.optim import adam as adam_mod
 from repro.optim import compression
+from repro.runtime import trace
 
 
 def _all_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(mesh.axis_names)
+
+
+def _trace_wrap_fns(fns: dict) -> dict:
+    """Wrap the layered epoch's jitted pieces in compute spans. jit calls
+    are async dispatch, so a piece's span measures time on the dispatching
+    thread; the executor's ``device_sync`` span captures where the device
+    work actually lands on the critical path."""
+    return {name: trace.wrap(name, fn, sys="compute", attr="compute")
+            for name, fn in fns.items()}
 
 
 @dataclasses.dataclass
@@ -698,7 +708,7 @@ class ExplicitZero3Engine:
             fns["layer_fwd"] = smap(_layer_fwd, (xspec, rowspec), xspec)
             fns["layer_vjp"] = smap(_layer_vjp, (xspec, rowspec, xspec),
                                     (xspec, rowspec))
-            return fns
+            return _trace_wrap_fns(fns)
 
         # ---- MoE layer pieces: attention part + fixed-width expert waves --
         # A layer materializes as 1 dense row (ln1+attn+ln2) plus, per wave,
@@ -776,7 +786,7 @@ class ExplicitZero3Engine:
                                  (xspec, rowspec)),
             "accum_sumsq2": smap(_accum_sumsq2, (rep, espec), rep),
         })
-        return fns
+        return _trace_wrap_fns(fns)
 
     def state_structs(self):
         """ShapeDtypeStruct tree matching ``init_state`` for the active tier."""

@@ -44,6 +44,7 @@ from repro.core.engine import ZeroInfinityEngine
 from repro.launch.mesh import make_production_mesh
 from repro.models import registry
 from repro.roofline import analysis
+from repro.runtime import trace
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
 
@@ -150,6 +151,63 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
     return rec
 
 
+def _trace_gate(args, ex, metrics, plan, *, param_nvme: bool,
+                cfg=None, shape=None) -> None:
+    """The trace smoke gate (tier-1 CI): export the Perfetto trace and the
+    stall report, then assert the instrumentation is real — nonzero
+    slow-tier read spans, attribution fractions that cover the step wall
+    time, and spans from every major subsystem on the layered path."""
+    if args.trace:
+        trace.export_chrome(args.trace)
+        print(f"trace: wrote {args.trace} "
+              f"({len(trace.TRACER.events())} spans)")
+    atts = list(ex.trace_attributions)
+    predictions = plan.predictions if plan is not None else None
+    if predictions is None and cfg is not None and shape is not None:
+        # Manual mode carries no plan, but the report should still show
+        # measured-vs-predicted: derive a shadow plan from the same flags
+        # purely for its Eq. 6 predictions (never applied to the run).
+        try:
+            shadow = plan_mod.plan_run(
+                cfg, shape, plan_mod.hardware_from_args(args),
+                overrides=plan_mod.overrides_from_argv(args))
+            predictions = shadow.predictions
+            metrics.setdefault("plan_efficiency",
+                               predictions.get("efficiency"))
+        except Exception:
+            predictions = None
+    report = trace.format_report(atts, predictions=predictions,
+                                 tracer=trace.TRACER)
+    if args.trace_report:
+        print(report)
+    frac = float(metrics.get("trace_attr_frac_sum", 0.0))
+    if not 0.95 <= frac <= 1.05:
+        raise SystemExit(
+            f"trace gate: attribution fractions sum to {frac:.3f}, outside "
+            "1±0.05 — compute_s + io_wait_s + other_s does not cover the "
+            "step wall time")
+    meff = metrics.get("trace_measured_efficiency")
+    peff = metrics.get("plan_efficiency")
+    print(f"trace gate: measured_efficiency="
+          f"{meff if meff is None else f'{meff:.3f}'} "
+          f"predicted_efficiency={peff if peff is None else f'{peff:.3f}'} "
+          f"overlap_frac={metrics.get('trace_overlap_frac', 0.0):.3f} "
+          f"attr_frac_sum={frac:.3f}")
+    if param_nvme:
+        names = trace.TRACER.span_names()
+        if not names.get("nvme_read"):
+            raise SystemExit(
+                "trace gate: no nvme_read spans recorded with "
+                "param_tier=nvme — store I/O is not instrumented")
+        systems = trace.TRACER.subsystems()
+        if len(systems) < 4:
+            raise SystemExit(
+                f"trace gate: spans cover only subsystems {systems} — "
+                "expected >= 4 of (sched, store, compute, optim, ...)")
+        print(f"trace gate: subsystems={systems} "
+              f"nvme_read_spans={names['nvme_read']}")
+
+
 def smoke_exec(args) -> None:
     """Tier-1 CI gate: run real steps with the configured tiers on the smoke
     config and, for NVMe-resident params, assert the layer scheduler keeps
@@ -204,6 +262,10 @@ def smoke_exec(args) -> None:
         return ex, metrics, losses
 
     ex, metrics, losses = _run_steps(run, plan)
+    if trace.enabled():
+        _trace_gate(args, ex, metrics, plan,
+                    param_nvme=run.offload.param_tier == "nvme",
+                    cfg=cfg, shape=shape)
     peak = int(metrics.get("peak_resident_param_bytes", -1))
     total = ex.total_param_bytes
     engine = run.parallel.engine
@@ -356,9 +418,19 @@ def main() -> None:
                     help="layer count override under --smoke-exec (must "
                          "exceed the window for a strict residency bound)")
     ap.add_argument("--tag", default="", help="suffix for the result file")
+    ap.add_argument("--trace", nargs="?", const="trace.json", default=None,
+                    metavar="OUT.json",
+                    help="enable the span tracer and write a Chrome/Perfetto "
+                         "trace-event JSON (default name trace.json)")
+    ap.add_argument("--trace-report", action="store_true",
+                    help="enable the tracer and print the per-step stall-"
+                         "attribution report (top stall sources, per-tier "
+                         "busy/idle, measured vs predicted efficiency)")
     plan_mod.add_plan_args(ap)
     args = ap.parse_args()
 
+    if args.trace or args.trace_report:
+        trace.enable()
     if args.smoke_exec:
         smoke_exec(args)
         return
@@ -459,6 +531,9 @@ def main() -> None:
                 print(f"[{mesh_name}] {arch:24s} {shape_name:12s} {st:8s} {extra}",
                       flush=True)
     print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if args.trace:
+        trace.export_chrome(args.trace)
+        print(f"trace: wrote {args.trace}")
     if n_err:
         raise SystemExit(1)
 

@@ -39,6 +39,7 @@ from repro.core.engine import ZeroInfinityEngine
 from repro.core.offload import HostArrayStore, NvmeStore, PinnedBufferPool
 from repro.launch.mesh import make_local_mesh
 from repro.runtime import metrics as metrics_mod
+from repro.runtime import trace
 
 
 def _parse(argv=None):
@@ -73,8 +74,20 @@ def _parse(argv=None):
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", nargs="?", const="trace.json", default=None,
+                    metavar="OUT.json",
+                    help="record spans and write a Chrome/Perfetto trace "
+                         "(runtime/trace.py) for the serve run")
     plan_mod.add_plan_args(ap)
     return ap.parse_args(argv)
+
+
+def _percentiles(xs) -> dict:
+    """p50/p95/p99 of a latency sample, in seconds (zeros when empty)."""
+    if not xs:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {f"p{q}": float(np.percentile(a, q)) for q in (50, 95, 99)}
 
 
 def run_serve(args, argv=None) -> dict:
@@ -113,6 +126,7 @@ def run_serve(args, argv=None) -> dict:
                           workers=run.offload.nvme_workers)
     else:
         store = HostArrayStore(pool=pool, workers=2)
+    store.trace_cls = "kv"
     # parked KV rides the same wire format as slow-tier params: blocks are
     # encoded on park and decoded on admission, so the waiting-sequence
     # footprint (and flush/fetch traffic) shrinks by the compression ratio
@@ -160,17 +174,22 @@ def run_serve(args, argv=None) -> dict:
 
         t_prefill = 0.0
         wave0 = None
+        ttft = [0.0] * n_seqs  # time to first token, from serve start
+        t_serve = pc()
         for w in range(n_waves):
             idx, valid = wave_rows(w)
             t0 = pc()
-            logits, cache = prefill_c(params, wave_batch(idx))
-            jax.block_until_ready(logits)
+            with trace.span("prefill", sys="serve", attr="compute", unit=w):
+                logits, cache = prefill_c(params, wave_batch(idx))
+                jax.block_until_ready(logits)
             t_prefill += pc() - t0
             first = np.asarray(
                 jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
             prefill_len = int(np.asarray(cache["len"]))
+            t_first = pc() - t_serve
             for j in range(valid):
                 s = idx[j]
+                ttft[s] = t_first
                 gen[s].append(int(first[j]))
                 if int(first[j]) == eos or N <= 1:
                     done[s] = True  # finished at birth: EOS-masked already
@@ -223,6 +242,7 @@ def run_serve(args, argv=None) -> dict:
         # so a freed slot pays only the uncovered remainder — reported as
         # admit_stall_s, separately from the total admission time.
         history = []
+        tok_lat = []  # per-token decode latency (one entry per token)
         t_decode = t_admit = t_admit_stall = 0.0
         steps = admissions = 0
         prefetched: collections.deque = collections.deque()
@@ -240,11 +260,15 @@ def run_serve(args, argv=None) -> dict:
                     continue
                 s, handle = prefetched.popleft()
                 ta = pc()
-                single, length = handle.result()
+                with trace.span("admit_wait", sys="serve", attr="io_wait",
+                                cls="kv", unit=s):
+                    single, length = handle.result()
                 t_admit_stall += pc() - ta
-                slot_cache = insert_c(
-                    slot_cache, jax.tree.map(jnp.asarray, single),
-                    jnp.int32(b), jnp.int32(length))
+                with trace.span("admit_insert", sys="serve", attr="compute",
+                                cls="kv", unit=s):
+                    slot_cache = insert_c(
+                        slot_cache, jax.tree.map(jnp.asarray, single),
+                        jnp.int32(b), jnp.int32(length))
                 t_admit += pc() - ta
                 kv.drop(f"seq{s}")
                 slot_seq[b], active[b] = s, True
@@ -256,11 +280,14 @@ def run_serve(args, argv=None) -> dict:
             if not any(active):
                 break
             t0 = pc()
-            logits, slot_cache = decode_c(
-                params, slot_cache, {"tokens": jnp.asarray(cur[:, None])})
-            toks = np.asarray(
-                jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
-            t_decode += pc() - t0
+            with trace.span("decode_step", sys="serve", attr="compute",
+                            unit=steps):
+                logits, slot_cache = decode_c(
+                    params, slot_cache, {"tokens": jnp.asarray(cur[:, None])})
+                toks = np.asarray(
+                    jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+            step_dt = pc() - t0
+            t_decode += step_dt
             steps += 1
             history.append(
                 metrics_mod.kv_step_metrics(kv.delta_since(m), resident))
@@ -268,6 +295,7 @@ def run_serve(args, argv=None) -> dict:
                 if not active[b]:
                     continue  # idle slot: padding decode, masked out
                 s = slot_seq[b]
+                tok_lat.append(step_dt)
                 gen[s].append(int(toks[b]))
                 cur[b] = toks[b]
                 if int(toks[b]) == eos or len(gen[s]) >= N:
@@ -285,6 +313,12 @@ def run_serve(args, argv=None) -> dict:
         "admissions": admissions,
         "plan": plan,
         "history": history,
+        "latency": {
+            "ttft_s": list(ttft),
+            "decode_token_s": list(tok_lat),
+            "ttft": _percentiles(ttft),
+            "decode_token": _percentiles(tok_lat),
+        },
         "kv": {
             "resident_bytes": resident,
             "in_bytes": int(stats.get("logical_bytes_read",
@@ -310,6 +344,8 @@ def run_serve(args, argv=None) -> dict:
 
 def main(argv=None) -> None:
     args = _parse(argv)
+    if args.trace:
+        trace.enable()
     out = run_serve(args, argv)
     t = out["timings"]
     gen, slots = out["generated"], out["slots"]
@@ -337,6 +373,17 @@ def main(argv=None) -> None:
           f"in {kvm['in_bytes']} B | out {kvm['out_bytes']} B | {wire}"
           f"pinned peak {kvm['pinned_peak_bytes']} B "
           f"(budget {kvm['pinned_budget_bytes']} B)")
+    lat = out["latency"]
+    ttft_p, tok_p = lat["ttft"], lat["decode_token"]
+    print(f"latency: TTFT p50/p95/p99 = {ttft_p['p50']*1e3:.1f}/"
+          f"{ttft_p['p95']*1e3:.1f}/{ttft_p['p99']*1e3:.1f} ms | "
+          f"decode tok p50/p95/p99 = {tok_p['p50']*1e3:.2f}/"
+          f"{tok_p['p95']*1e3:.2f}/{tok_p['p99']*1e3:.2f} ms "
+          f"({len(lat['decode_token_s'])} tokens)")
+    if args.trace:
+        trace.export_chrome(args.trace)
+        print(f"trace: wrote {args.trace} "
+              f"({len(trace.TRACER.events())} spans)")
     for s in range(min(n_seqs, 4)):
         print(f"slot {s}: {gen[s][:16]}")
 
@@ -364,10 +411,22 @@ def main(argv=None) -> None:
                 f"SERVE SMOKE FAIL: pinned staging "
                 f"{kvm['pinned_peak_bytes']} B exceeded the "
                 f"{kvm['pinned_budget_bytes']} B budget")
+        for which in ("ttft", "decode_token"):
+            p = lat.get(which)
+            if p is None or any(k not in p for k in ("p50", "p95", "p99")):
+                raise SystemExit(
+                    f"SERVE SMOKE FAIL: latency percentiles missing for "
+                    f"{which}: {p}")
+            if p["p50"] > p["p99"]:
+                raise SystemExit(
+                    f"SERVE SMOKE FAIL: {which} latency percentiles "
+                    f"inverted: p50 {p['p50']*1e3:.2f} ms > "
+                    f"p99 {p['p99']*1e3:.2f} ms")
         print(f"SERVE SMOKE OK: {n_seqs} seqs through {slots} "
               f"{out['kv_tier']}-tier slots, {out['steps']} steps, "
               f"{out['admissions']} admissions, EOS-masked, "
-              f"KV residency within plan")
+              f"KV residency within plan, latency percentiles sane "
+              f"(decode tok p50 {tok_p['p50']*1e3:.2f} ms)")
 
 
 if __name__ == "__main__":

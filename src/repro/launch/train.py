@@ -27,6 +27,7 @@ from repro.config import (RunConfig, ShapeConfig, TrainConfig, make_offload,
 from repro.core.executor import InfinityExecutor
 from repro.data.pipeline import PrefetchLoader, SyntheticStream
 from repro.launch.mesh import make_local_mesh, maybe_init_distributed
+from repro.runtime import trace
 from repro.runtime.fault import FailureInjector, StragglerMonitor, retry_loop
 from repro.runtime.metrics import MetricsLogger
 
@@ -78,6 +79,11 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--resume", default="no", choices=["no", "auto"])
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", nargs="?", const="trace.json", default=None,
+                    metavar="OUT.json",
+                    help="record spans and write a Chrome/Perfetto trace "
+                         "(runtime/trace.py); per-step stall attribution "
+                         "lands in the step metrics as trace_* fields")
     return ap
 
 
@@ -119,6 +125,18 @@ def make_run(args):
         train=tc,
     )
     return run, None
+
+
+def make_metrics_logger(model_flops_per_token, mesh, plan) -> MetricsLogger:
+    """MFU denominator comes from the plan's measured/declared hardware when
+    one exists; the paper-V100 default only covers manual mode."""
+    kw = {}
+    if plan is not None:
+        kw["peak_flops"] = float(plan.hardware.peak_flops)
+        kw["n_chips"] = int(plan.hardware.n_devices)
+    else:
+        kw["n_chips"] = len(mesh.devices.flat)
+    return MetricsLogger(model_flops_per_token=model_flops_per_token, **kw)
 
 
 def train(args) -> dict:
@@ -163,8 +181,7 @@ def train(args) -> dict:
                                  seed=run.train.seed)
         loader = PrefetchLoader(stream, start_step, run.train.steps,
                                 executor.batch_shardings(shape))
-        logger = MetricsLogger(model_flops_per_token=executor.n_params_active(),
-                               n_chips=len(mesh.devices.flat))
+        logger = make_metrics_logger(executor.n_params_active(), mesh, plan)
         tokens = shape.global_batch * shape.seq_len
 
         with compat.set_mesh(mesh):
@@ -197,6 +214,8 @@ def train(args) -> dict:
 
 def main() -> None:
     args = build_argparser().parse_args()
+    if getattr(args, "trace", None):
+        trace.enable()
     t0 = time.time()
     hist = train(args)
     losses = hist["losses"]
@@ -206,6 +225,10 @@ def main() -> None:
         s = hist["nvme_stats"]
         print(f"nvme: read {s['read_gbps']:.2f} GB/s, write {s['write_gbps']:.2f} GB/s, "
               f"pinned peak {s['pinned_peak_bytes']>>20} MiB")
+    if getattr(args, "trace", None):
+        trace.export_chrome(args.trace)
+        print(f"trace: wrote {args.trace} "
+              f"({len(trace.TRACER.events())} spans)")
     return hist
 
 
