@@ -177,6 +177,18 @@ class InfinityExecutor:
         self._trace_tid: Optional[int] = None
         self.trace_attributions: list = []
 
+    def close(self) -> None:
+        """Flush and shut down the slow-tier stores (worker threads, pinned
+        staging). The elastic supervisor tears an incarnation's executor
+        down with this before building a replacement over the surviving
+        membership; a closed executor must not step again."""
+        for store in (self.param_store, self.grad_store, self.opt_store):
+            if store is not None:
+                store.close()
+        self.param_store = self.grad_store = self.opt_store = None
+        self.param_stream = self.offload = None
+        self._step_fn = None
+
     # ------------------------------------------------------------------
     # state
     # ------------------------------------------------------------------

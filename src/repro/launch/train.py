@@ -28,8 +28,9 @@ from repro.core.executor import InfinityExecutor
 from repro.data.pipeline import PrefetchLoader, SyntheticStream
 from repro.launch.mesh import make_local_mesh, maybe_init_distributed
 from repro.runtime import trace
+from repro.runtime.elastic import wire_straggler
 from repro.runtime.fault import FailureInjector, StragglerMonitor, retry_loop
-from repro.runtime.metrics import MetricsLogger
+from repro.runtime.metrics import MetricsLogger, elastic_step_metrics
 
 
 def build_argparser() -> argparse.ArgumentParser:
@@ -74,6 +75,25 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--pinned-buffer-mb", type=int, default=64,
                     help="shared pinned buffer-pool budget (all stores)")
     plan_mod.add_plan_args(ap)
+    ap.add_argument("--elastic", action="store_true",
+                    help="run under the ElasticSupervisor "
+                         "(runtime/elastic.py): membership changes trigger "
+                         "re-plan -> re-shard -> resume instead of a full "
+                         "restart; implies plan-driven config (legacy flags "
+                         "become planner overrides)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="membership-event injection for --elastic, e.g. "
+                         "'fail@3' or 'fail:2,3@5;revive@9' "
+                         "(kind[:ranks]@step, ';'-joined; each event fires "
+                         "once)")
+    ap.add_argument("--straggler-factor", type=float, default=3.0,
+                    help="flag a step as a straggler when its wall time "
+                         "exceeds this multiple of the running median")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="restart budget for crash recovery")
+    ap.add_argument("--recovery-budget", type=float, default=60.0,
+                    help="max cumulative recovery wall-clock seconds before "
+                         "giving up")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", default="no", choices=["no", "auto"])
@@ -139,8 +159,45 @@ def make_metrics_logger(model_flops_per_token, mesh, plan) -> MetricsLogger:
     return MetricsLogger(model_flops_per_token=model_flops_per_token, **kw)
 
 
+def train_elastic(args) -> dict:
+    """The ``--elastic`` path: the ElasticSupervisor owns the loop. Config
+    is always plan-derived here (re-planning against the surviving hardware
+    is the point), with explicitly-passed legacy flags as overrides — the
+    same contract as ``--plan auto``."""
+    from repro.runtime.elastic import (ChaosSchedule, ClusterMembership,
+                                       ElasticConfig, ElasticSupervisor)
+
+    assert args.model_mesh == 1, "--elastic supports data-parallel meshes"
+    cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    tc = TrainConfig(lr=args.lr, steps=args.steps, checkpoint_dir=args.ckpt_dir,
+                     checkpoint_every=args.ckpt_every, seed=args.seed)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    membership = ClusterMembership(
+        devices=jax.devices()[:args.data_mesh],
+        hardware=plan_mod.hardware_from_args(args, nvme_dir=args.nvme_dir))
+    parallel_kw = {"zero_stage": args.zero_stage}
+    if args.grad_compress != "none":
+        parallel_kw["grad_compression"] = args.grad_compress
+    supervisor = ElasticSupervisor(
+        model=cfg, shape=shape, train=tc, membership=membership,
+        ckpt=CheckpointManager(tc.checkpoint_dir, keep=tc.keep_checkpoints),
+        chaos=ChaosSchedule.from_spec(args.chaos),
+        injector=FailureInjector(),
+        straggler=StragglerMonitor(factor=args.straggler_factor),
+        objective=args.objective,
+        overrides=plan_mod.overrides_from_argv(args),
+        parallel_kw=parallel_kw, nvme_dir=args.nvme_dir,
+        overlap=not args.no_overlap,
+        config=ElasticConfig(max_restarts=args.max_restarts,
+                             recovery_budget_s=args.recovery_budget),
+        resume=args.resume == "auto", log_every=args.log_every)
+    return supervisor.run()
+
+
 def train(args) -> dict:
     maybe_init_distributed()
+    if getattr(args, "elastic", False):
+        return train_elastic(args)
     run, plan = make_run(args)
     mesh = make_local_mesh(args.data_mesh, args.model_mesh)
     executor = InfinityExecutor(run, mesh, plan=plan)
@@ -148,7 +205,9 @@ def train(args) -> dict:
 
     ckpt = CheckpointManager(run.train.checkpoint_dir, keep=run.train.keep_checkpoints)
     injector = FailureInjector()
-    straggler = StragglerMonitor()
+    straggler = wire_straggler(
+        StragglerMonitor(factor=getattr(args, "straggler_factor", 3.0)))
+    retry_stats = {"restarts": 0, "recovery_s": 0.0}
     history = {"losses": [], "restarts": 0}
 
     def run_once():
@@ -193,7 +252,12 @@ def train(args) -> dict:
                 dt = straggler.stop(step)
                 history["losses"].append(loss)
                 if step % args.log_every == 0:
-                    logger.log(step, loss, tokens, dt)
+                    extras = elastic_step_metrics(
+                        restarts=retry_stats["restarts"],
+                        recovery_s=retry_stats["recovery_s"],
+                        n_alive=len(mesh.devices.flat))
+                    extras.update(straggler.step_metrics())
+                    logger.log(step, loss, tokens, dt, **extras)
                 if run.train.checkpoint_every and (step + 1) % run.train.checkpoint_every == 0:
                     # slow-tier-resident params are materialized from the
                     # store for the snapshot (the carried leaf is a struct)
@@ -206,7 +270,10 @@ def train(args) -> dict:
             history["nvme_stats"] = stats
 
     history["restarts"] = retry_loop(
-        run_once, on_restart=lambda n, e: print(f"restart #{n} after: {e}"))
+        run_once, max_restarts=args.max_restarts,
+        recovery_budget_s=args.recovery_budget, stats=retry_stats,
+        on_restart=lambda n, e: print(f"restart #{n} after: {e}"))
+    history["recovery_s"] = retry_stats["recovery_s"]
     if straggler.flagged:
         print(f"straggler steps flagged: {straggler.flagged}")
     return history
@@ -221,6 +288,13 @@ def main() -> None:
     losses = hist["losses"]
     print(f"done in {time.time()-t0:.1f}s | first loss {losses[0]:.4f} | "
           f"last loss {losses[-1]:.4f} | restarts {hist['restarts']}")
+    if "elastic" in hist:
+        e = hist["elastic"]
+        print(f"elastic: restarts={e['elastic_restarts']} "
+              f"replans={e['elastic_replans']} "
+              f"resizes={e['elastic_resizes']} "
+              f"recovery_s={e['elastic_recovery_s']} "
+              f"n_alive={e['elastic_n_alive']}")
     if "nvme_stats" in hist:
         s = hist["nvme_stats"]
         print(f"nvme: read {s['read_gbps']:.2f} GB/s, write {s['write_gbps']:.2f} GB/s, "

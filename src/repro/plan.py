@@ -145,6 +145,29 @@ class HardwareSpec:
             return self.nvme_bw
         raise ValueError(f"unknown tier {tier!r}; allowed: {_TIERS}")
 
+    # -- elastic membership ---------------------------------------------
+
+    def with_membership(self, n_alive: int) -> "HardwareSpec":
+        """The cluster after an elastic membership change: ``n_alive``
+        devices survive. Per-device rates (HBM, bandwidths, peak FLOPs) are
+        unchanged — the survivors' hardware didn't get slower — but the
+        aggregate capacities pooled across nodes (host DRAM, NVMe) scale
+        with the alive fraction: losing half the nodes loses half the
+        slow-tier pool, which is exactly what makes a re-plan against the
+        shrunken spec demote state down the tier ladder
+        (``runtime/elastic.py``)."""
+        if n_alive == self.n_devices:
+            return self
+        if n_alive < 1:
+            raise ValueError(
+                f"with_membership({n_alive}): needs >= 1 surviving device")
+        frac = n_alive / self.n_devices
+        return dataclasses.replace(
+            self, n_devices=n_alive,
+            host_mem=self.host_mem * frac,
+            nvme_capacity=self.nvme_capacity * frac,
+            devices_per_node=max(1, min(self.devices_per_node, n_alive)))
+
     # -- detection ------------------------------------------------------
 
     @classmethod

@@ -8,7 +8,8 @@ tests/test_fault_tolerance.py:
   * ``FailureInjector``  — deterministic fault injection (env/step-driven)
     so restart paths are *tested*, not assumed.
   * ``retry_loop``       — supervision: on failure, restore latest
-    checkpoint and resume; bounded restarts; exponential backoff.
+    checkpoint and resume; bounded restarts; jittered exponential backoff
+    under a wall-clock recovery budget (``RecoveryBudgetExceeded``).
   * ``StragglerMonitor`` — per-step wall-time EMA + MAD outlier detection.
     Single-process action = log & count; the multi-host action (re-shard
     data away from the slow host / preempt to spares) plugs into
@@ -17,12 +18,18 @@ tests/test_fault_tolerance.py:
 from __future__ import annotations
 
 import os
+import random
 import time
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 
 class SimulatedFailure(RuntimeError):
     pass
+
+
+class RecoveryBudgetExceeded(RuntimeError):
+    """Cumulative recovery wall time blew the configured budget. NOT a
+    ``SimulatedFailure``: supervision must stop retrying, not absorb it."""
 
 
 class FailureInjector:
@@ -55,18 +62,15 @@ class StragglerMonitor:
         self.flagged: List[int] = []
         self._t0: Optional[float] = None
         self.on_straggler: Optional[Callable[[int, float, float], None]] = None
+        # last observed dt / median ratio, for the step-metric surface
+        self.last_slowdown: float = 0.0
 
     def start(self) -> None:
         self._t0 = time.perf_counter()
 
     def stop(self, step: int) -> float:
         dt = time.perf_counter() - self._t0
-        baseline = self.median()
-        if len(self.times) >= self.warmup and baseline and dt > self.factor * baseline:
-            self.flagged.append(step)
-            if self.on_straggler:
-                self.on_straggler(step, dt, baseline)
-        self.times.append(dt)
+        self._record(step, dt)
         return dt
 
     def median(self) -> Optional[float]:
@@ -77,7 +81,11 @@ class StragglerMonitor:
 
     def observe(self, step: int, dt: float) -> bool:
         """Offline-feed variant (unit tests / simulated timings)."""
+        return self._record(step, dt)
+
+    def _record(self, step: int, dt: float) -> bool:
         baseline = self.median()
+        self.last_slowdown = dt / baseline if baseline else 0.0
         flag = bool(len(self.times) >= self.warmup and baseline
                     and dt > self.factor * baseline)
         if flag:
@@ -87,20 +95,58 @@ class StragglerMonitor:
         self.times.append(dt)
         return flag
 
+    def step_metrics(self) -> Dict[str, float]:
+        """Per-step metric fields: cumulative flagged count + the latest
+        step's slowdown ratio vs the running median."""
+        return {"straggler_flagged": len(self.flagged),
+                "straggler_slowdown": round(self.last_slowdown, 3)}
+
 
 def retry_loop(run_once: Callable[[], None], *, max_restarts: int = 3,
-               backoff_s: float = 0.1,
-               on_restart: Optional[Callable[[int, BaseException], None]] = None) -> int:
-    """Supervise ``run_once``; restart on failure. Returns restart count."""
+               backoff_s: float = 0.1, jitter: float = 0.25,
+               recovery_budget_s: Optional[float] = None, seed: int = 0,
+               on_restart: Optional[Callable[[int, BaseException], None]] = None,
+               stats: Optional[Dict[str, float]] = None) -> int:
+    """Supervise ``run_once``; restart on failure. Returns restart count.
+
+    ``jitter`` decorrelates herd restarts: each backoff is scaled by a
+    uniform ``1 + [0, jitter)`` factor (deterministic per ``seed`` so tests
+    stay reproducible). ``recovery_budget_s`` bounds the cumulative wall
+    clock spent recovering — backoff sleeps plus re-attempts that fail
+    again — raising ``RecoveryBudgetExceeded`` when blown. ``stats`` (a
+    caller-supplied dict) is updated *live* with ``restarts`` and
+    ``recovery_s``, so the running ``run_once`` closure can surface them
+    in its step metrics.
+    """
+    rng = random.Random(seed)
     restarts = 0
+    recovery = 0.0
+    if stats is not None:
+        stats.update(restarts=0, recovery_s=0.0)
     while True:
+        t0 = time.perf_counter()
         try:
             run_once()
             return restarts
         except SimulatedFailure as e:
+            if restarts > 0:
+                # a recovery attempt that failed again is recovery time too
+                recovery += time.perf_counter() - t0
             restarts += 1
             if restarts > max_restarts:
                 raise
+            if recovery_budget_s is not None and recovery >= recovery_budget_s:
+                raise RecoveryBudgetExceeded(
+                    f"{recovery:.2f}s cumulative recovery exceeds the "
+                    f"{recovery_budget_s:.0f}s budget after {restarts - 1} "
+                    "restarts") from e
             if on_restart:
                 on_restart(restarts, e)
-            time.sleep(backoff_s * (2 ** (restarts - 1)))
+            delay = (backoff_s * (2 ** (restarts - 1))
+                     * (1.0 + jitter * rng.random()))
+            if recovery_budget_s is not None:
+                delay = min(delay, max(0.0, recovery_budget_s - recovery))
+            time.sleep(delay)
+            recovery += delay
+            if stats is not None:
+                stats.update(restarts=restarts, recovery_s=recovery)

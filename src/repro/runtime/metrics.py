@@ -28,6 +28,28 @@ class MetricsLogger:
         return rec
 
 
+def elastic_step_metrics(*, restarts: int = 0, replans: int = 0,
+                         resizes: int = 0, recovery_s: float = 0.0,
+                         n_alive: int = 1,
+                         membership_version: int = 0) -> dict:
+    """Per-step elastic-runtime metric fields (``runtime/elastic.py``).
+
+    All counters are cumulative over the run, not per-step deltas — a step
+    record answers "how much recovery has this trajectory absorbed so far":
+    ``elastic_restarts`` crash recoveries (checkpoint-restore path),
+    ``elastic_replans`` planner invocations (the boot plan counts),
+    ``elastic_resizes`` graceful membership changes (live re-shard, no lost
+    steps), ``elastic_recovery_s`` cumulative failure->resumed-step wall
+    time, ``elastic_n_alive`` / ``elastic_membership_version`` the
+    membership view the current incarnation is planned for."""
+    return {"elastic_restarts": int(restarts),
+            "elastic_replans": int(replans),
+            "elastic_resizes": int(resizes),
+            "elastic_recovery_s": round(float(recovery_s), 3),
+            "elastic_n_alive": int(n_alive),
+            "elastic_membership_version": int(membership_version)}
+
+
 def kv_step_metrics(delta: dict, resident_bytes: int) -> dict:
     """Per-step KV-tier metrics for the serving loop, named like the
     training executor's per-tier counters (``param_in_*`` / ``grad_out_*``).

@@ -14,7 +14,8 @@ measurement side of that question:
   * span taxonomy — every span carries a ``sys`` subsystem tag (``sched``
     scheduler prefetch, ``store`` tier I/O, ``compute`` jitted pieces,
     ``optim`` optimizer write-back, ``kv`` serving cache, ``serve`` the
-    decode loop) plus optional ``cls`` (state class: param/grad/opt/
+    decode loop, ``elastic`` recovery: re-plan / re-shard / resume spans
+    and straggler flags) plus optional ``cls`` (state class: param/grad/opt/
     expert/kv), ``unit`` (schedule unit), and free-form args (logical and
     wire byte counts for store I/O).
   * attribution — main-thread spans additionally carry ``attr``:
@@ -52,7 +53,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 # Subsystem tags (the ``sys=`` span arg). Kept as a tuple so gates can
 # report coverage ("spans from >= 4 distinct subsystems") by one name.
-SUBSYSTEMS = ("sched", "store", "compute", "optim", "kv", "serve")
+SUBSYSTEMS = ("sched", "store", "compute", "optim", "kv", "serve", "elastic")
 
 
 class _NoopSpan:

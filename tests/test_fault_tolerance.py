@@ -1,6 +1,8 @@
 """Fault tolerance: injected failure -> restart-from-checkpoint must land on
 the same loss trajectory as an uninterrupted run; elastic restore across
-different dp degrees; straggler detection; data-stream determinism."""
+different dp degrees; chaos-driven membership changes through the
+ElasticSupervisor; checkpoint durability; straggler detection; data-stream
+determinism."""
 import os
 import subprocess
 import sys
@@ -10,9 +12,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.checkpoint.manager import CheckpointCorruptError, CheckpointManager
 from repro.data.pipeline import SyntheticStream
-from repro.runtime.fault import (FailureInjector, SimulatedFailure,
-                                 StragglerMonitor, retry_loop)
+from repro.plan import HardwareSpec
+from repro.runtime import trace
+from repro.runtime.elastic import (ChaosSchedule, ClusterMembership,
+                                   parse_chaos, wire_straggler)
+from repro.runtime.fault import (FailureInjector, RecoveryBudgetExceeded,
+                                 SimulatedFailure, StragglerMonitor,
+                                 retry_loop)
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
@@ -43,6 +51,31 @@ def test_retry_loop_restarts():
     assert len(calls) == 3
 
 
+def test_retry_loop_recovery_budget():
+    def always_fail():
+        raise SimulatedFailure("link down")
+
+    with pytest.raises(RecoveryBudgetExceeded):
+        retry_loop(always_fail, max_restarts=1000, backoff_s=0.01,
+                   recovery_budget_s=0.05)
+
+
+def test_retry_loop_surfaces_stats():
+    stats, calls = {}, []
+
+    def run_once():
+        calls.append(1)
+        if len(calls) < 3:
+            raise SimulatedFailure("boom")
+
+    restarts = retry_loop(run_once, max_restarts=5, backoff_s=0.001,
+                          jitter=0.5, seed=7, stats=stats,
+                          recovery_budget_s=30.0)
+    assert restarts == 2
+    assert stats["restarts"] == 2
+    assert stats["recovery_s"] > 0.0  # backoff sleeps count toward recovery
+
+
 def test_straggler_monitor_flags_outliers():
     mon = StragglerMonitor(factor=3.0, warmup=5)
     events = []
@@ -53,6 +86,149 @@ def test_straggler_monitor_flags_outliers():
     mon.observe(11, 0.11)
     assert mon.flagged == [10]
     assert events == [10]
+
+
+def test_straggler_step_metrics():
+    mon = StragglerMonitor(factor=3.0, warmup=5)
+    for s in range(8):
+        mon.observe(s, 0.1)
+    assert mon.step_metrics() == {"straggler_flagged": 0,
+                                  "straggler_slowdown": 1.0}
+    mon.observe(8, 0.9)
+    m = mon.step_metrics()
+    assert m["straggler_flagged"] == 1
+    assert m["straggler_slowdown"] == pytest.approx(9.0, abs=0.01)
+
+
+def test_wire_straggler_logs_and_traces():
+    trace.enable()
+    trace.clear()
+    try:
+        logs = []
+        mon = wire_straggler(StragglerMonitor(factor=3.0, warmup=5),
+                             log=logs.append)
+        for s in range(8):
+            mon.observe(s, 0.05)
+        mon.observe(8, 0.5)
+        assert logs and "straggler" in logs[0]
+        ours = [ev for ev in trace.TRACER.events() if ev[0] == "straggler"]
+        assert ours and ours[0][1] == "elastic"
+    finally:
+        trace.disable()
+        trace.clear()
+
+
+def test_parse_chaos_grammar():
+    ev = parse_chaos("revive@9; fail:2,3@5 fail@3")
+    assert [(e.kind, e.step, e.ranks) for e in ev] == [
+        ("fail", 3, None), ("fail", 5, (2, 3)), ("revive", 9, None)]
+    for bad in ("kill@3", "fail@", "fail:@3", "fail3", "@5"):
+        with pytest.raises(ValueError):
+            parse_chaos(bad)
+
+
+def test_chaos_schedule_fires_once():
+    assert ChaosSchedule.from_spec(None) is None
+    assert ChaosSchedule.from_spec("") is None
+    sched = ChaosSchedule.from_spec("fail@3;revive@9")
+    assert len(sched) == 2
+    assert [e.kind for e in sched.due(4)] == ["fail"]
+    # popped: a step re-executed after recovery never re-triggers the fault
+    assert sched.due(4) == []
+    assert [e.kind for e in sched.due(100)] == ["revive"]
+    assert len(sched) == 0
+
+
+def test_cluster_membership_fail_revive():
+    hw = HardwareSpec(n_devices=4, host_mem=64e9, nvme_capacity=1e12)
+    mem = ClusterMembership(devices=list("abcd"), hardware=hw)
+    assert mem.n_alive == 4 and mem.version == 0
+    assert mem.dp_for(12) == 4
+
+    assert mem.fail() == (3,)  # default: highest alive rank
+    assert mem.n_alive == 3 and mem.version == 1
+    assert mem.dp_for(8) == 2  # largest divisor of the batch <= alive
+    assert mem.fail([1, 2]) == (1, 2)
+    assert mem.alive_ranks() == [0] and mem.alive_devices() == ["a"]
+
+    # the last survivor is never removed: that's a plain crash, not a shrink
+    assert mem.fail() == () and mem.fail([0]) == ()
+    assert mem.n_alive == 1 and mem.dp_for(12) == 1
+
+    assert mem.revive() == (1, 2, 3)  # default: every dead rank rejoins
+    assert mem.n_alive == 4
+    v = mem.version
+    assert mem.revive() == ()  # nothing dead -> no-op
+    assert mem.version == v
+
+    # planner view scales aggregate pools with the alive fraction
+    assert mem.hardware(2).host_mem == hw.host_mem / 2
+
+
+def test_with_membership_scaling():
+    hw = HardwareSpec(n_devices=8, device_mem=16e9, host_mem=64e9,
+                      nvme_capacity=2e12, devices_per_node=4)
+    hw2 = hw.with_membership(2)
+    assert hw2.n_devices == 2
+    assert hw2.device_mem == hw.device_mem  # per-device rates unchanged
+    assert hw2.host_mem == hw.host_mem / 4
+    assert hw2.nvme_capacity == hw.nvme_capacity / 4
+    assert hw2.devices_per_node == 2
+    assert hw.with_membership(8) is hw
+    with pytest.raises(ValueError):
+        hw.with_membership(0)
+
+
+def _ckpt_tree(v: float) -> dict:
+    return {"w": np.full((4, 4), v, np.float32),
+            "b": np.arange(8, dtype=np.float32) * v}
+
+
+def test_checkpoint_truncated_leaf_falls_back(tmp_path):
+    """Regression: a torn write in the newest checkpoint must not kill the
+    run — restore() falls back to the previous complete step."""
+    mgr = CheckpointManager(str(tmp_path), keep=4, async_save=False)
+    mgr.save(1, _ckpt_tree(1.0), {"next_step": 1})
+    mgr.save(2, _ckpt_tree(2.0), {"next_step": 2})
+
+    d = mgr._step_dir(2)
+    leaf = sorted(f for f in os.listdir(d) if f.endswith(".npy"))[0]
+    path = os.path.join(d, leaf)
+    with open(path, "rb") as f:
+        data = f.read()
+    with open(path, "wb") as f:
+        f.write(data[: len(data) // 2])  # truncate: simulated torn write
+
+    tree, extra = mgr.restore(_ckpt_tree(0.0))
+    assert extra["next_step"] == 1
+    np.testing.assert_array_equal(tree["w"], np.full((4, 4), 1.0, np.float32))
+    # an explicitly requested broken step raises instead of lying
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(_ckpt_tree(0.0), step=2)
+
+
+def test_checkpoint_checksum_detects_bitflip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=4, async_save=False)
+    mgr.save(1, _ckpt_tree(1.0), {"next_step": 1})
+    mgr.save(2, _ckpt_tree(2.0), {"next_step": 2})
+
+    d = mgr._step_dir(2)
+    leaf = sorted(f for f in os.listdir(d) if f.endswith(".npy"))[0]
+    path = os.path.join(d, leaf)
+    with open(path, "rb") as f:
+        data = bytearray(f.read())
+    data[-1] ^= 0xFF  # flip a payload byte; file length is unchanged
+    with open(path, "wb") as f:
+        f.write(bytes(data))
+
+    tree, extra = mgr.restore(_ckpt_tree(0.0))
+    assert extra["next_step"] == 1
+
+    # corrupt the older step too -> nothing intact left
+    with open(os.path.join(mgr._step_dir(1), "manifest.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(CheckpointCorruptError, match="no intact"):
+        mgr.restore(_ckpt_tree(0.0))
 
 
 def test_stream_determinism():
@@ -107,3 +283,18 @@ def test_elastic_restore_across_dp(tmp_path):
                        text=True, timeout=600)
     assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-2000:])
     assert "ELASTIC OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_chaos_acceptance_matrix():
+    """Full chaos matrix through the ElasticSupervisor (subprocess, 8 host
+    devices): kill ranks mid-run (dp 4 -> 2, checkpoint re-shard), revive
+    them (dp 2 -> 4, live re-shard), loss-trajectory parity with an
+    uninterrupted baseline, elastic_* metrics and sys=elastic trace spans,
+    and plan feasibility on the shrunken HardwareSpec."""
+    script = os.path.join(os.path.dirname(__file__), "dist_scripts", "chaos.py")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, script], env=env, capture_output=True,
+                       text=True, timeout=900)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
+    assert "CHAOS OK" in r.stdout
